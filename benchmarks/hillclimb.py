@@ -1,0 +1,183 @@
+import os
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""§Perf hillclimb harness: hypothesis -> change -> measure -> validate.
+
+Evaluates named *variants* of the three chosen cells against the same
+compiled-artifact metrics the roofline uses (decomposed unrolled probes for
+FLOPs / collective bytes, plus a full-cell compile for the per-device HBM
+number), and appends every iteration to experiments/perf/log.jsonl.
+
+Variants are combinations of:
+  * n_micro         — gradient-accumulation depth (collective volume scales
+                      with it under FSDP; activation memory scales inversely)
+  * fsdp            — False = ZeRO-1: params TP-only + optimizer state
+                      sharded over data (tests whether XLA hoists the
+                      per-micro grad all-reduce out of the accumulation loop)
+  * accum_dtype     — fp32 vs bf16 accumulation buffers
+  * capacity_factor — MoE dispatch capacity
+  * q_block         — attention q-tile
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.roofline import (
+    HBM_BW, ICI_BW, PEAK_FLOPS, _add, _mul, _probe_metrics, _sub,
+    analytic_bytes, model_flops, probe_opt,
+)
+from repro.configs import SHAPES, get_arch, input_specs
+from repro.distributed.sharding import default_rules, shardings_for
+from repro.launch.hlo_stats import _eval_shape_with_axes, _mem_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.models.lm import init_params
+from repro.optim.adamw import init_opt_state, opt_state_axes
+from repro.runtime.train_step import batch_axes_for, build_train_step
+
+OUT = pathlib.Path(__file__).resolve().parent.parent / "experiments" / "perf"
+
+
+def _shardings(cfg, shape, mesh, fsdp: bool, layout: str = "2d"):
+    p_rules = default_rules(mesh, fsdp=fsdp, layout=layout)
+    o_rules = default_rules(mesh, fsdp=True, layout=layout)
+    key = jax.random.PRNGKey(0)
+    specs = input_specs(cfg, shape)
+    b_sh = shardings_for(p_rules, batch_axes_for(cfg, "train"), specs)
+    p_shapes, p_axes = _eval_shape_with_axes(lambda k: init_params(cfg, k), key)
+    p_sh = shardings_for(p_rules, p_axes, p_shapes)
+    o_shapes = jax.eval_shape(init_opt_state, p_shapes)
+    o_sh = shardings_for(o_rules, opt_state_axes(p_axes), o_shapes)
+    return p_rules, specs, b_sh, p_shapes, p_sh, o_shapes, o_sh
+
+
+def probe_train(cfg, shape, mesh, fsdp: bool, n_micro: int, accum_dtype,
+                layout: str = "2d"):
+    rules, specs, b_sh, p_shapes, p_sh, o_shapes, o_sh = _shardings(
+        cfg, shape, mesh, fsdp, layout)
+    fn = build_train_step(cfg, rules, n_micro=n_micro,
+                          accum_dtype=accum_dtype)
+    lowered = jax.jit(fn, in_shardings=({"params": p_sh, "opt": o_sh}, b_sh),
+                      donate_argnums=(0,)).lower(
+        {"params": p_shapes, "opt": o_shapes}, specs)
+    compiled = lowered.compile()
+    return compiled
+
+
+def measure_variant(arch_id: str, shape_name: str, *, n_micro: int,
+                    fsdp: bool = True, accum_dtype="float32",
+                    capacity_factor: float | None = None,
+                    q_block: int | None = None, layout: str = "2d",
+                    remat: str | None = None, moe_groups: int | None = None,
+                    tag: str = "") -> dict:
+    """Full measurement: decomposed probes for flops/coll + full-cell memory."""
+    cfg = get_arch(arch_id)
+    over = {}
+    if capacity_factor is not None:
+        over["capacity_factor"] = capacity_factor
+    if q_block is not None:
+        over["q_block"] = q_block
+    if remat is not None:
+        over["remat"] = remat
+    if moe_groups is not None:
+        over["moe_groups"] = moe_groups
+    if over:
+        cfg = dataclasses.replace(cfg, **over)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh()
+    n_dev = int(mesh.devices.size)
+    adt = jnp.bfloat16 if accum_dtype == "bfloat16" else jnp.float32
+
+    t0 = time.time()
+    # (1) full-cell compile: per-device HBM + raw collective count
+    compiled = probe_train(cfg, shape, mesh, fsdp, n_micro, adt, layout)
+    mem = _mem_analysis(compiled)
+
+    # (2) decomposed probes at the microbatch size for flops/coll totals
+    micro_shape = dataclasses.replace(
+        shape, global_batch=max(shape.global_batch // n_micro, 1))
+    rules = default_rules(mesh, fsdp=fsdp, layout=layout)
+
+    def unrolled(L, ae=None):
+        c = dataclasses.replace(cfg, n_layers=L, scan_layers=False,
+                                **({"attn_every": ae} if ae else {}))
+        comp = probe_train(c, micro_shape, mesh, fsdp, 1, adt, layout)
+        return _probe_metrics(comp)
+
+    if cfg.family == "hybrid":
+        p1, p2, p1s = unrolled(1, 999), unrolled(2, 999), unrolled(1, 1)
+        layer = _sub(p2, p1)
+        shared = _sub(p1s, p1)
+        opt1 = probe_opt(dataclasses.replace(cfg, n_layers=1), mesh, rules)
+        base = _sub(_sub(p1, layer), opt1)
+        per_micro = _add(_add(_mul(layer, cfg.n_layers),
+                              _mul(shared, cfg.n_layers // cfg.attn_every)),
+                         base)
+    else:
+        p1, p2 = unrolled(1), unrolled(2)
+        layer = _sub(p2, p1)
+        opt1 = probe_opt(dataclasses.replace(cfg, n_layers=1), mesh, rules)
+        base = _sub(_sub(p1, layer), opt1)
+        per_micro = _add(_mul(layer, cfg.n_layers), base)
+    opt_full = probe_opt(cfg, mesh, rules)
+    total = _add(_mul(per_micro, n_micro), opt_full)
+
+    terms = {
+        "compute_s": total["flops"] / PEAK_FLOPS,
+        "memory_s": analytic_bytes(cfg, shape, n_dev, n_micro) / HBM_BW,
+        "collective_s": total["coll"] / ICI_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    bound = max(terms.values()) or 1e-12
+    rec = {
+        "arch": arch_id, "shape": shape_name, "tag": tag,
+        "variant": {"n_micro": n_micro, "fsdp": fsdp, "layout": layout,
+                    "accum_dtype": accum_dtype, "remat": remat,
+                    "capacity_factor": capacity_factor, "q_block": q_block,
+                    "moe_groups": moe_groups},
+        "hbm_gib": mem.get("total_hbm_bytes", 0) / 2 ** 30,
+        "terms_seconds": terms,
+        "dominant": dominant,
+        "roofline_fraction": (mf / n_dev / PEAK_FLOPS) / bound,
+        "useful_flop_ratio": mf / max(total["flops"] * n_dev, 1e-9),
+        "measure_s": round(time.time() - t0, 1),
+    }
+    OUT.mkdir(parents=True, exist_ok=True)
+    with open(OUT / "log.jsonl", "a") as f:
+        f.write(json.dumps(rec) + "\n")
+    t = terms
+    print(f"[{tag or 'variant'}] {arch_id}x{shape_name} n_micro={n_micro} "
+          f"fsdp={fsdp} accum={accum_dtype}: hbm={rec['hbm_gib']:.2f}GiB "
+          f"comp={t['compute_s']*1e3:.0f}ms coll={t['collective_s']*1e3:.0f}ms "
+          f"mem={t['memory_s']*1e3:.1f}ms frac={rec['roofline_fraction']:.3f}",
+          flush=True)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--n-micro", type=int, required=True)
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--accum", default="float32")
+    ap.add_argument("--capacity", type=float)
+    ap.add_argument("--q-block", type=int)
+    ap.add_argument("--layout", default="2d", choices=["2d", "fsdp_pure", "ep_only", "ep_dp"])
+    ap.add_argument("--remat", choices=["none", "block", "full"])
+    ap.add_argument("--moe-groups", type=int)
+    ap.add_argument("--tag", default="")
+    a = ap.parse_args()
+    measure_variant(a.arch, a.shape, n_micro=a.n_micro, fsdp=not a.no_fsdp,
+                    accum_dtype=a.accum, capacity_factor=a.capacity,
+                    q_block=a.q_block, layout=a.layout, remat=a.remat,
+                    moe_groups=a.moe_groups, tag=a.tag)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,137 @@
+"""Benchmark harness entry point: one artifact per paper table/figure,
+plus kernel microbenches and the dry-run/roofline summaries.
+
+Prints ``name,metric,value`` CSV rows (plus per-workload detail rows).
+Heavy artifacts are cached under experiments/paper/.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+import time
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _emit(name: str, rows) -> None:
+    if isinstance(rows, dict):
+        rows = [rows]
+    for row in rows:
+        flat = ",".join(f"{k}={_fmt(v)}" for k, v in row.items())
+        print(f"{name},{flat}")
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    if isinstance(v, dict):
+        return "|".join(f"{k}:{_fmt(x)}" for k, x in v.items())
+    return v
+
+
+def bench_paper_figures() -> None:
+    from benchmarks.paper_figs import ALL_FIGS
+    for name, fn in ALL_FIGS.items():
+        t0 = time.time()
+        rows = fn()
+        _emit(name, rows)
+        print(f"# {name}: {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+def bench_kernels() -> None:
+    """Interpret-mode micro-bench: wall time is NOT TPU perf — this verifies
+    the kernels execute and reports call latencies for regression tracking."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.ltrf_matmul.ops import ltrf_matmul
+    from repro.kernels.ssd_scan.ops import ssd_scan
+
+    def timed(fn, *args, n=3, **kw):
+        fn(*args, **kw)  # warmup/compile
+        t0 = time.time()
+        for _ in range(n):
+            jax.block_until_ready(fn(*args, **kw))
+        return (time.time() - t0) / n * 1e6
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (256, 512), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (512, 256), jnp.float32)
+    us = timed(ltrf_matmul, x, w, bm=128, bk=128, bn=128, interpret=True)
+    _emit("kernels", {"name": "ltrf_matmul_256x512x256", "us_per_call": us})
+
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 4, 256, 64))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 256, 64))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 2, 256, 64))
+    us = timed(flash_attention, q, k, v, bq=128, bk=128, interpret=True)
+    _emit("kernels", {"name": "flash_attention_b1h4s256", "us_per_call": us})
+
+    xs = jax.random.normal(jax.random.PRNGKey(0), (1, 128, 2, 8)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1), (1, 128, 2)))
+    A = -jnp.exp(jnp.linspace(0.0, 1.0, 2))
+    Bm = jax.random.normal(jax.random.PRNGKey(2), (1, 128, 8)) * 0.3
+    Cm = jax.random.normal(jax.random.PRNGKey(3), (1, 128, 8)) * 0.3
+    us = timed(ssd_scan, xs, dt, A, Bm, Cm, chunk=32, interpret=True)
+    _emit("kernels", {"name": "ssd_scan_s128", "us_per_call": us})
+
+
+def bench_dryrun_summary() -> None:
+    d = ROOT / "experiments" / "dryrun"
+    if not d.exists():
+        print("# dry-run JSONs missing; run python -m repro.launch.dryrun --all",
+              file=sys.stderr)
+        return
+    for p in sorted(d.glob("*.json")):
+        r = json.loads(p.read_text())
+        if not r.get("runnable", True):
+            _emit("dryrun", {"arch": r["arch"], "shape": r["shape"],
+                             "mesh": r["mesh"], "status": "defined-skip"})
+            continue
+        mem = r.get("memory", {}).get("total_hbm_bytes", 0) / 2 ** 30
+        _emit("dryrun", {
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "status": "ok" if r.get("ok") else "FAIL",
+            "mem_gib": mem,
+            "coll_mib": r.get("collectives", {}).get("total_bytes", 0) / 2 ** 20,
+            "compile_s": r.get("compile_s", -1),
+        })
+
+
+def bench_roofline_summary() -> None:
+    d = ROOT / "experiments" / "roofline"
+    if not d.exists():
+        print("# roofline JSONs missing; run python -m benchmarks.roofline --all",
+              file=sys.stderr)
+        return
+    for p in sorted(d.glob("*.json")):
+        r = json.loads(p.read_text())
+        if "skipped" in r or "error" in r:
+            continue
+        t = r["terms_seconds"]
+        _emit("roofline", {
+            "arch": r["arch"], "shape": r["shape"],
+            "compute_ms": t["compute_s"] * 1e3,
+            "memory_ms": t["memory_s"] * 1e3,
+            "collective_ms": t["collective_s"] * 1e3,
+            "dominant": r["dominant"].replace("_s", ""),
+            "useful_flop_ratio": r["useful_flop_ratio"],
+            "roofline_fraction": r["roofline_fraction"],
+        })
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    benches = {
+        "paper": bench_paper_figures,
+        "kernels": bench_kernels,
+        "dryrun": bench_dryrun_summary,
+        "roofline": bench_roofline_summary,
+    }
+    for name, fn in benches.items():
+        if only and name != only:
+            continue
+        fn()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Quickstart: the paper's pipeline end to end on the Listing-1 kernel, plus
+the same machinery planning a TPU layer stream.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import (
+    form_register_intervals, parse_asm, prefetch_schedule, renumber_registers,
+)
+from repro.core.plan import LayerNode, Tile, plan_layer_stream
+from repro.sim import baseline_config, design_config, simulate
+from repro.workloads import WORKLOADS, listing1_program
+
+MB = 2 ** 20
+
+
+def compiler_walkthrough() -> None:
+    print("=== paper §4.3 walk-through: Listing 1 ===")
+    prog = listing1_program()
+    analysis = form_register_intervals(prog, n_cap=4)
+    print(f"register-intervals (cap=4): {len(analysis.intervals)}")
+    for iv in analysis.intervals:
+        print(f"  interval {iv.iid}: blocks={iv.blocks} "
+              f"working-set={sorted(iv.working_set)}")
+
+    before = prefetch_schedule(analysis, num_banks=4, scheme="grouped")
+    print("bank conflicts before renumbering:",
+          [op.conflicts for op in before])
+    rr = renumber_registers(analysis, num_banks=4, scheme="grouped")
+    after = prefetch_schedule(rr.analysis, num_banks=4, scheme="grouped")
+    print("bank conflicts after renumbering: ",
+          [op.conflicts for op in after])
+
+
+def performance_model() -> None:
+    print("\n=== LTRF on a slow 8x register file (config #7, DWM 6.3x) ===")
+    w = WORKLOADS["srad"]
+    base = simulate(w, baseline_config()).ipc
+    for design in ("BL", "RFC", "LTRF", "LTRF_conf", "Ideal"):
+        r = simulate(w, design_config(design, table2_config=7))
+        print(f"  {design:10s} normalized IPC = {r.ipc / base:.2f}")
+
+
+def tpu_plan() -> None:
+    print("\n=== the same interval analysis planning a TPU layer stream ===")
+    layers = [LayerNode(f"block{i}",
+                        [Tile(f"w{i}_attn", 24 * MB), Tile(f"w{i}_mlp", 48 * MB)])
+              for i in range(8)]
+    plan = plan_layer_stream(layers, vmem_budget=96 * MB, num_slots=2)
+    print(f"{plan.num_intervals} HBM->VMEM prefetch rounds "
+          f"(budget 96MB, max round {plan.max_interval_bytes() / MB:.0f}MB)")
+    for p in plan.prefetches[:3]:
+        print(f"  round {p.interval_id}: layers={p.layer_names} "
+              f"bytes={p.bytes / MB:.0f}MB slots={p.slots}")
+
+
+if __name__ == "__main__":
+    compiler_walkthrough()
+    performance_model()
+    tpu_plan()

@@ -1,0 +1,10 @@
+from .base import (
+    ArchConfig, SHAPES, ShapeConfig, cell_is_runnable, input_specs,
+    smoke_shape,
+)
+from .registry import ARCH_IDS, all_cells, get_arch, get_smoke
+
+__all__ = [
+    "ArchConfig", "SHAPES", "ShapeConfig", "cell_is_runnable", "input_specs",
+    "smoke_shape", "ARCH_IDS", "all_cells", "get_arch", "get_smoke",
+]

@@ -1,0 +1,25 @@
+"""LTRF core: the paper's primary contribution.
+
+Compiler side: PTX-like IR (+ a tiny asm DSL), register-interval formation
+(Algorithms 1 & 2), liveness / register-live-ranges, Interval Conflict Graph,
+Chaitin balanced coloring, register renumbering, prefetch-op construction.
+
+System side (`plan`): the same interval/coloring machinery applied to model
+layer graphs to schedule HBM->VMEM tile prefetching on TPU.
+"""
+from .ir import Instr, BasicBlock, Program, parse_asm
+from .intervals import Interval, IntervalAnalysis, form_register_intervals
+from .liveness import annotate_dead_operands, block_liveness, build_live_ranges
+from .icg import ICG, build_icg
+from .coloring import Coloring, chaitin_color
+from .renumber import RenumberResult, bank_of, renumber_registers
+from .prefetch import PrefetchOp, conflict_distribution, prefetch_schedule
+
+__all__ = [
+    "Instr", "BasicBlock", "Program", "parse_asm",
+    "Interval", "IntervalAnalysis", "form_register_intervals",
+    "annotate_dead_operands", "block_liveness", "build_live_ranges",
+    "ICG", "build_icg", "Coloring", "chaitin_color",
+    "RenumberResult", "bank_of", "renumber_registers",
+    "PrefetchOp", "conflict_distribution", "prefetch_schedule",
+]

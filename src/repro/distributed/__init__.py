@@ -1,0 +1,15 @@
+from .sharding import (
+    ShardingRules, constrain, default_rules, logical_to_spec, param_shardings,
+    shardings_for, use_rules,
+)
+from .fault import FaultConfig, FaultTolerantTrainer, SimulatedFailure
+from .elastic import degraded_mesh, reshard_state
+from .pipeline_parallel import pipeline_forward, sequential_reference
+
+__all__ = [
+    "ShardingRules", "constrain", "default_rules", "logical_to_spec",
+    "param_shardings", "shardings_for", "use_rules",
+    "FaultConfig", "FaultTolerantTrainer", "SimulatedFailure",
+    "degraded_mesh", "reshard_state",
+    "pipeline_forward", "sequential_reference",
+]

@@ -1,0 +1,263 @@
+"""Logical-axis sharding rules (MaxText-style) for the production mesh.
+
+Model code annotates params and activations with *logical* axis names
+('embed', 'heads', 'act_batch', ...).  A :class:`ShardingRules` table maps
+those to mesh axes; `constrain` applies `with_sharding_constraint` when a
+rule-set is active (a contextvar), and is a no-op otherwise so the same model
+code runs unsharded on one device.
+
+Default 2D layout (+ optional pod axis):
+  * batch / act_batch       -> ('pod', 'data')      data parallelism
+  * embed                   -> 'data'               FSDP: params + optimizer
+                                                    state sharded over DP
+  * heads/kv/ffn/vocab/
+    experts                 -> 'model'              tensor / expert parallelism
+  * act_seq                 -> None ('model' when sequence parallelism is on)
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh
+    table: dict[str | None, Any] = field(default_factory=dict)
+
+    def axis(self, name: str | None):
+        return self.table.get(name)
+
+
+def default_rules(mesh: Mesh, sequence_parallel: bool = False,
+                  fsdp: bool = True, layout: str = "2d") -> ShardingRules:
+    """Sharding layouts over the fixed production mesh.
+
+    * ``2d`` (default): batch over ('pod','data'), TP over 'model'; fsdp=True
+      shards params + optimizer state ('embed') over 'data' (ZeRO-3-style),
+      fsdp=False keeps params TP-only/replicated (ZeRO-1 posture).
+    * ``fsdp_pure``: no tensor parallelism — batch AND the FSDP shard span
+      ('pod','data','model') jointly (fully-sharded DP).  Removes every
+      per-layer TP activation all-reduce; weights stream layer-by-layer via
+      one all-gather per traversal.  The right layout when one chip's
+      compute fits a layer and the global batch >= chip count (phi3-class).
+    """
+    axes = set(mesh.axis_names)
+    if layout == "fsdp_pure":
+        all_axes = tuple(a for a in ("pod", "data", "model") if a in axes)
+        table = {
+            None: None,
+            "batch": all_axes,
+            "act_batch": all_axes,
+            "embed": all_axes if fsdp else None,
+            "heads": None, "kv": None, "ffn": None,
+            "vocab": None, "experts": None,
+            "layers": None,
+            "act_seq": None, "act_embed": None, "act_heads": None,
+            "act_kv": None, "act_hd": None, "act_experts": None,
+            "act_vocab": None, "act_ffn": None,
+        }
+        return ShardingRules(mesh=mesh, table=table)
+    if layout == "ep_dp":
+        # MoE posture #2: batch spans ALL mesh axes (full DP for the dense
+        # paths — no replicated attention compute), experts + vocab sharded
+        # over 'model' (tokens all-to-all into expert shards), attention
+        # weights FSDP-sharded over 'data'.  GSPMD chooses between gathering
+        # dm-sharded expert weights and partial-sum all-reduces.
+        all_axes = tuple(a for a in ("pod", "data", "model") if a in axes)
+        model = "model" if "model" in axes else None
+        data = "data" if "data" in axes else None
+        table = {
+            None: None,
+            "batch": all_axes,
+            "act_batch": all_axes,
+            "embed": data if fsdp else None,
+            "heads": None, "kv": None, "ffn": None,
+            "vocab": model, "experts": model,
+            "layers": None,
+            "act_seq": None, "act_embed": None, "act_heads": None,
+            "act_kv": None, "act_hd": None,
+            "act_experts": model, "act_vocab": model, "act_ffn": None,
+        }
+        return ShardingRules(mesh=mesh, table=table)
+    if layout == "ep_only":
+        # MoE posture: expert parallelism (+ sharded vocab head) on 'model',
+        # FSDP on 'data', NO tensor parallelism on attention/dense paths —
+        # removes the per-layer TP activation all-reduces while keeping the
+        # expert weights distributed; the MoE all-to-all is the only
+        # per-layer collective left.
+        batch = tuple(a for a in ("pod", "data") if a in axes) or None
+        if isinstance(batch, tuple) and len(batch) == 1:
+            batch = batch[0]
+        model = "model" if "model" in axes else None
+        data = "data" if "data" in axes else None
+        table = {
+            None: None,
+            "batch": batch,
+            "act_batch": batch,
+            "embed": data if fsdp else None,
+            "heads": None, "kv": None, "ffn": None,
+            "vocab": model, "experts": model,
+            "layers": None,
+            "act_seq": None, "act_embed": None, "act_heads": None,
+            "act_kv": None, "act_hd": None,
+            "act_experts": model, "act_vocab": model, "act_ffn": None,
+        }
+        return ShardingRules(mesh=mesh, table=table)
+    batch = tuple(a for a in ("pod", "data") if a in axes) or None
+    if isinstance(batch, tuple) and len(batch) == 1:
+        batch = batch[0]
+    model = "model" if "model" in axes else None
+    data = "data" if "data" in axes else None
+    table = {
+        None: None,
+        "batch": batch,
+        "act_batch": batch,
+        "embed": data if fsdp else None,
+        "heads": model,
+        "kv": model,
+        "ffn": model,
+        "vocab": model,
+        "experts": model,
+        "layers": None,
+        "act_seq": model if sequence_parallel else None,
+        "act_embed": None,
+        "act_heads": model,
+        "act_ffn": model,
+        "act_vocab": model,
+        "act_kv": model,
+        "act_hd": None,
+        "act_experts": model,
+    }
+    return ShardingRules(mesh=mesh, table=table)
+
+
+_ACTIVE: contextvars.ContextVar[ShardingRules | None] = \
+    contextvars.ContextVar("sharding_rules", default=None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: ShardingRules | None):
+    tok = _ACTIVE.set(rules)
+    try:
+        yield rules
+    finally:
+        _ACTIVE.reset(tok)
+
+
+def active_rules() -> ShardingRules | None:
+    return _ACTIVE.get()
+
+
+def logical_to_spec(rules: ShardingRules, names: tuple) -> P:
+    return P(*(rules.axis(n) for n in names))
+
+
+def constrain(x, names: tuple):
+    """Annotate an intermediate with logical axes (no-op without rules).
+
+    Applies the same shape-aware rules as :func:`shardings_for`: a mesh axis
+    is used at most once per tensor (first dimension wins) and only when it
+    divides the dimension."""
+    rules = _ACTIVE.get()
+    if rules is None:
+        return x
+    spec: list = []
+    used: set[str] = set()
+    for i, dim in enumerate(x.shape):
+        name = names[i] if i < len(names) else None
+        ax = rules.axis(name)
+        mem = set(ax) if isinstance(ax, (tuple, list)) else {ax}
+        if (ax is not None and dim % _axis_size(rules.mesh, ax) == 0
+                and not (mem & used)):
+            spec.append(ax)
+            used |= mem
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, P(*spec)))
+
+
+def param_shardings(rules: ShardingRules, axes_tree) -> Any:
+    """Map a pytree of logical-axis tuples to NamedShardings."""
+    return jax.tree.map(
+        lambda names: NamedSharding(rules.mesh, logical_to_spec(rules, names)),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+def _axis_size(mesh: Mesh, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, (tuple, list)):
+        n = 1
+        for a in ax:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[ax]
+
+
+# When a primary dimension can't take its mesh axis (non-divisible), the
+# axis may move to a fallback dimension of the same tensor: KV caches with
+# few kv-heads shard the head_dim over 'model' instead.
+_FALLBACK_TARGETS = {"act_hd": "act_kv"}  # dim name -> dim it substitutes for
+
+
+def shardings_for(rules: ShardingRules, axes_tree, shapes_tree) -> Any:
+    """Shape-aware shardings for jit *arguments*: a mesh axis is applied to a
+    dimension only when it divides it evenly (jit arguments, unlike internal
+    constraints, reject uneven sharding).  E.g. kv=4 heads stay replicated on
+    a model=16 axis; a 50280 vocab stays unsharded over 16.  A dropped
+    'act_kv' axis falls back onto the tensor's 'act_hd' dimension."""
+    def one(names, shp):
+        dims = getattr(shp, "shape", None)
+        if dims is None:
+            return NamedSharding(rules.mesh, P())
+        spec: list = []
+        dropped: set[str] = set()
+        used: set[str] = set()
+
+        def members(ax):
+            return set(ax) if isinstance(ax, (tuple, list)) else {ax}
+
+        for i, dim in enumerate(dims):
+            name = names[i] if i < len(names) else None
+            ax = rules.axis(name)
+            ok = (ax is not None
+                  and dim % _axis_size(rules.mesh, ax) == 0
+                  and not (members(ax) & used))  # each mesh axis used once
+            if ok:
+                spec.append(ax)
+                used |= members(ax)
+            else:
+                spec.append(None)
+                if ax is not None and name is not None:
+                    dropped.add(name)
+        for i, dim in enumerate(dims):
+            name = names[i] if i < len(names) else None
+            src = _FALLBACK_TARGETS.get(name or "")
+            if src and src in dropped and spec[i] is None:
+                ax = rules.axis(src)
+                if (ax is not None and dim % _axis_size(rules.mesh, ax) == 0
+                        and not (members(ax) & used)):
+                    spec[i] = ax
+                    used |= members(ax)
+        return NamedSharding(rules.mesh, P(*spec))
+
+    return jax.tree.map(one, axes_tree, shapes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def stack_axes(axes_tree, prefix: str | None = "layers"):
+    """Prepend a leading (scan/stack) axis to every logical-axes tuple."""
+    return jax.tree.map(
+        lambda names: (prefix, *names),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )

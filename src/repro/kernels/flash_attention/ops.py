@@ -1,0 +1,31 @@
+"""Jit wrapper for the blocked causal attention kernel (GQA layout glue)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_kernel
+from .ref import attention_ref
+
+
+@partial(jax.jit, static_argnames=("bq", "bk", "causal", "interpret"))
+def flash_attention(q, k, v, bq: int = 256, bk: int = 256,
+                    causal: bool = True, interpret: bool = False):
+    """q: (B, H, S, d); k/v: (B, KV, S, d) -> (B, H, S, d)."""
+    B, H, S, d = q.shape
+    KV = k.shape[1]
+    assert H % KV == 0, (H, KV)
+    bq = min(bq, S)
+    bk = min(bk, S)
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    out = flash_attention_kernel(
+        q.reshape(B * H, S, d),
+        k.reshape(B * KV, S, d),
+        v.reshape(B * KV, S, d),
+        group=H // KV, bq=bq, bk=bk, causal=causal, interpret=interpret)
+    return out.reshape(B, H, S, d)
+
+
+__all__ = ["flash_attention", "attention_ref"]

@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the LTRF-planned matmul."""
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w, out_dtype=None):
+    out_dtype = out_dtype or x.dtype
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)).astype(out_dtype)

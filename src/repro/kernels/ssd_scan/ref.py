@@ -1,0 +1,28 @@
+"""Naive per-token recurrence oracle for the Mamba2 SSD scan."""
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, Bm, Cm):
+    """Sequential state-space recurrence.
+
+    x: (B,S,H,P); dt: (B,S,H); A: (H,); Bm/Cm: (B,S,N).
+    Returns (y: (B,S,H,P), final_state: (B,H,P,N))."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(h_state, inp):
+        xt, dtt, bt, ct = inp           # (B,H,P), (B,H), (B,N), (B,N)
+        dA = jnp.exp(jnp.clip(dtt * A[None, :], -60.0, 0.0))
+        upd = jnp.einsum("bhp,bn->bhpn", xt * dtt[..., None], bt)
+        h_state = h_state * dA[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", h_state, ct)
+        return h_state, y
+
+    init = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    xs = (x.astype(jnp.float32).transpose(1, 0, 2, 3),
+          dt.astype(jnp.float32).transpose(1, 0, 2),
+          Bm.astype(jnp.float32).transpose(1, 0, 2),
+          Cm.astype(jnp.float32).transpose(1, 0, 2))
+    final, ys = jax.lax.scan(step, init, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), final

@@ -1,0 +1,194 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and extract memory / cost / collective statistics.
+
+MUST be run as a module entry point (``python -m repro.launch.dryrun``) so the
+XLA_FLAGS line above executes before jax initializes its backends.
+
+Per cell this:
+  1. builds the 16x16 (single-pod) or 2x16x16 (multi-pod) mesh;
+  2. builds the train/prefill or decode step via the SAME builders the real
+     trainer/server use;
+  3. ``jit(...).lower(shapes)`` with ShapeDtypeStruct stand-ins (no
+     allocation), then ``.compile()`` — a sharding mismatch, OOM-at-compile
+     or unsupported collective fails here;
+  4. records ``compiled.memory_analysis()`` (proves the cell fits HBM),
+     ``compiled.cost_analysis()`` (FLOPs/bytes for the roofline), and
+     collective bytes parsed from the post-SPMD HLO;
+  5. writes JSON to experiments/dryrun/<arch>_<shape>_<mesh>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k
+  python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import json
+import pathlib
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, SHAPES, cell_is_runnable, get_arch, input_specs
+from repro.distributed.sharding import default_rules, shardings_for
+from repro.launch.mesh import make_production_mesh
+from repro.models.lm import init_decode_cache, init_params
+from repro.optim.adamw import init_opt_state, opt_state_axes
+from repro.runtime.train_step import (
+    batch_axes_for, batch_shardings, build_decode_step, build_prefill_step,
+    build_train_step,
+)
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+# v5e hardware constants (per chip) for the roofline terms
+PEAK_FLOPS = 197e12      # bf16 FLOP/s
+HBM_BW = 819e9           # bytes/s
+ICI_BW = 50e9            # bytes/s/link
+HBM_BYTES = 16 * 2 ** 30
+
+from repro.launch.hlo_stats import (  # noqa: F401 (re-exported)
+    _BYTES, _COLL_OPS, _SHAPE_RE, _cost_analysis, _eval_shape_with_axes,
+    _mem_analysis, _shape_bytes, collective_stats,
+)
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True) -> dict:
+    cfg = get_arch(arch_id)
+    shape = SHAPES[shape_name]
+    ok, why = cell_is_runnable(cfg, shape)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec: dict = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+                 "runnable": ok, "skip_reason": why, "ok": False}
+    if not ok:
+        rec["ok"] = True  # a defined skip counts as pass
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(mesh.devices.size)
+    rules = default_rules(mesh)
+    key = jax.random.PRNGKey(0)
+
+    specs = input_specs(cfg, shape)
+    kind = "decode" if shape.is_decode else "train"
+    b_sh = shardings_for(rules, batch_axes_for(cfg, kind), specs)
+
+    p_shapes, p_axes = _eval_shape_with_axes(lambda k: init_params(cfg, k), key)
+    p_sh = shardings_for(rules, p_axes, p_shapes)
+
+    if shape.is_decode:
+        c_shapes, c_axes = _eval_shape_with_axes(
+            lambda: init_decode_cache(cfg, shape.global_batch, shape.seq_len))
+        c_sh = shardings_for(rules, c_axes, c_shapes)
+        step = build_decode_step(cfg, rules)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_sh, c_sh, b_sh["tokens"], b_sh["cache_len"]),
+            donate_argnums=(1,),
+        )
+        lowered = jitted.lower(p_shapes, c_shapes, specs["tokens"],
+                               specs["cache_len"])
+    elif shape.kind == "prefill":
+        dp = n_dev // int(mesh.shape["model"])
+        n_micro = max(1, shape.global_batch // dp)
+        rec["n_micro"] = n_micro
+        step = build_prefill_step(cfg, rules, n_micro=n_micro)
+        jitted = jax.jit(step, in_shardings=(p_sh, b_sh))
+        lowered = jitted.lower(p_shapes, specs)
+    else:
+        o_shapes = jax.eval_shape(init_opt_state, p_shapes)
+        state_shapes = {"params": p_shapes, "opt": o_shapes}
+        st_sh = {"params": p_sh,
+                 "opt": shardings_for(rules, opt_state_axes(p_axes), o_shapes)}
+        # gradient accumulation: one sequence per device per microbatch
+        dp = n_dev // int(mesh.shape["model"])
+        n_micro = max(1, shape.global_batch // dp)
+        rec["n_micro"] = n_micro
+        step = build_train_step(cfg, rules, n_micro=n_micro)
+        jitted = jax.jit(step, in_shardings=(st_sh, b_sh), donate_argnums=(0,))
+        lowered = jitted.lower(state_shapes, specs)
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = _mem_analysis(compiled)
+    cost = _cost_analysis(compiled)
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = lowered.as_text()
+    coll = collective_stats(hlo)
+
+    flops_total = cost.get("flops", 0.0)
+    # XLA's CPU cost analysis reports per-program flops for the SPMD module
+    # (one device's share); scale to fleet totals for bookkeeping.
+    rec.update({
+        "ok": True,
+        "devices": n_dev,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": mem,
+        "cost": cost,
+        "collectives": coll,
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+        "hlo_bytes": len(hlo),
+    })
+    mem_dev = mem.get("total_hbm_bytes")
+    if verbose:
+        print(f"[{arch_id} x {shape_name} x {mesh_name}] "
+              f"lower={t_lower:.1f}s compile={t_compile:.1f}s "
+              f"flops={flops_total:.3g} "
+              f"mem/dev={mem_dev if mem_dev is None else mem_dev/2**30:.3f}GiB "
+              f"coll={coll['total_bytes']/2**20:.1f}MiB/{coll['total_count']}ops",
+              flush=True)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out-dir", default=str(OUT_DIR))
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch_id, shape_name in cells:
+        mesh_name = "pod2x16x16" if args.multi_pod else "pod16x16"
+        path = out_dir / f"{arch_id}_{shape_name}_{mesh_name}.json"
+        try:
+            rec = run_cell(arch_id, shape_name, args.multi_pod)
+        except Exception as e:  # noqa: BLE001 - record the failure
+            rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+                   "ok": False, "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+            print(f"[{arch_id} x {shape_name} x {mesh_name}] FAILED: {e}",
+                  flush=True)
+            failures += 1
+        path.write_text(json.dumps(rec, indent=2))
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

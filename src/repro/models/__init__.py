@@ -1,0 +1,6 @@
+from .lm import (
+    decode_step, forward, init_decode_cache, init_params, loss_fn,
+)
+
+__all__ = ["decode_step", "forward", "init_decode_cache", "init_params",
+           "loss_fn"]

@@ -1,0 +1,469 @@
+"""Unified language-model substrate for all ten assigned architectures.
+
+One parameter/forward implementation covers the dense / moe / vlm / audio /
+ssm / hybrid families.  Layers are *scanned* (params stacked on a leading
+axis) so the lowered HLO stays small enough to compile 512-device meshes on
+one CPU host.  Activation/param logical-axis annotations flow through
+`repro.distributed.sharding.constrain`.
+
+Entry points:
+  init_params(cfg, key)            -> (params, logical_axes)
+  loss_fn(params, batch, cfg)      -> (scalar loss, metrics)  [train/prefill]
+  init_decode_cache(cfg, B, S_max) -> cache pytree (+ axes)
+  decode_step(params, cache, tokens, cache_len, cfg) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import constrain, stack_axes
+
+from .layers import (
+    attention_block, attention_decode, cross_entropy, embed, init_attention,
+    init_embedding, init_mlp, init_rms, mlp_block, rms_norm, _init,
+)
+from .mamba2 import (
+    CONV_K, init_mamba2, mamba2_block, mamba2_decode,
+)
+from .moe import init_moe, moe_block
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _stack(inits):
+    """Stack a list of identical pytrees along a new leading axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *inits)
+
+
+def _init_block(cfg: ArchConfig, key):
+    """One transformer/moe/ssm block's params + logical axes."""
+    ks = jax.random.split(key, 4)
+    dt = cfg.jdtype
+    if cfg.family == "ssm" or cfg.family == "hybrid":
+        p, a = init_mamba2(ks[0], cfg.d_model, cfg.ssm_state, cfg.ssm_headdim,
+                           cfg.ssm_expand, dt)
+        n, na = init_rms(cfg.d_model)
+        return {"mixer": p, "norm": n}, {"mixer": a, "norm": na}
+    params: dict = {}
+    axes: dict = {}
+    params["attn"], axes["attn"] = init_attention(
+        ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.qk_norm, dt)
+    params["norm1"], axes["norm1"] = init_rms(cfg.d_model)
+    params["norm2"], axes["norm2"] = init_rms(cfg.d_model)
+    if cfg.family == "moe":
+        params["moe"], axes["moe"] = init_moe(
+            ks[1], cfg.d_model, cfg.d_ff, cfg.n_experts, dt)
+    else:
+        params["mlp"], axes["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, dt)
+    return params, axes
+
+
+def init_params(cfg: ArchConfig, key):
+    ks = jax.random.split(key, 8)
+    dt = cfg.jdtype
+    params: dict = {}
+    axes: dict = {}
+
+    if cfg.family == "audio":
+        K = cfg.n_codebooks
+        tabs = [init_embedding(k, cfg.vocab, cfg.d_model, dt)[0]
+                for k in jax.random.split(ks[0], K)]
+        params["embed"] = jnp.stack(tabs)
+        axes["embed"] = (None, "vocab", "embed")
+        params["lm_head"] = _init(ks[1], (cfg.d_model, K * cfg.vocab),
+                                  1.0 / math.sqrt(cfg.d_model), dt)
+        axes["lm_head"] = ("embed", "vocab")
+    else:
+        params["embed"], axes["embed"] = init_embedding(ks[0], cfg.vocab,
+                                                        cfg.d_model, dt)
+        params["lm_head"] = _init(ks[1], (cfg.d_model, cfg.vocab),
+                                  1.0 / math.sqrt(cfg.d_model), dt)
+        axes["lm_head"] = ("embed", "vocab")
+
+    blocks = [_init_block(cfg, k) for k in jax.random.split(ks[2], cfg.n_layers)]
+    params["layers"] = _stack([b[0] for b in blocks])
+    axes["layers"] = stack_axes(blocks[0][1])
+
+    if cfg.family == "hybrid":
+        # one shared full transformer block (attention + MLP), re-entrant
+        sp: dict = {}
+        sa: dict = {}
+        sp["attn"], sa["attn"] = init_attention(
+            ks[3], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+            cfg.qk_norm, dt)
+        sp["mlp"], sa["mlp"] = init_mlp(ks[4], cfg.d_model, cfg.d_ff, dt)
+        sp["norm1"], sa["norm1"] = init_rms(cfg.d_model)
+        sp["norm2"], sa["norm2"] = init_rms(cfg.d_model)
+        params["shared_attn"] = sp
+        axes["shared_attn"] = sa
+
+    params["final_norm"], axes["final_norm"] = init_rms(cfg.d_model)
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# blocks (forward)
+# ---------------------------------------------------------------------------
+
+def _dense_block(cfg: ArchConfig, p, x, positions):
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    h = attention_block(p["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                        head_dim=cfg.hd, positions=positions,
+                        qk_norm=cfg.qk_norm, rope_theta=cfg.rope_theta,
+                        norm_eps=cfg.norm_eps, q_block=cfg.q_block)
+    x = x + h
+    x = constrain(x, ("act_batch", "act_seq", "act_embed"))
+    h = rms_norm(x, p["norm2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        h, aux = moe_block(p["moe"], h, top_k=cfg.top_k,
+                           capacity_factor=cfg.capacity_factor,
+                           groups=cfg.moe_groups)
+    else:
+        h, aux = mlp_block(p["mlp"], h), jnp.zeros((), jnp.float32)
+    x = x + h
+    x = constrain(x, ("act_batch", "act_seq", "act_embed"))
+    return x, aux
+
+
+def _ssm_block(cfg: ArchConfig, p, x):
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    h = mamba2_block(p["mixer"], h, d_state=cfg.ssm_state,
+                     headdim=cfg.ssm_headdim, expand=cfg.ssm_expand,
+                     chunk=cfg.ssm_chunk, norm_eps=cfg.norm_eps)
+    x = x + h
+    return constrain(x, ("act_batch", "act_seq", "act_embed"))
+
+
+def _shared_block(cfg: ArchConfig, p, x, positions):
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    h = attention_block(p["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                        head_dim=cfg.hd, positions=positions,
+                        rope_theta=cfg.rope_theta, norm_eps=cfg.norm_eps,
+                        q_block=cfg.q_block)
+    x = x + h
+    h = rms_norm(x, p["norm2"], cfg.norm_eps)
+    x = x + mlp_block(p["mlp"], h)
+    return constrain(x, ("act_batch", "act_seq", "act_embed"))
+
+
+def _maybe_remat(fn, cfg: ArchConfig):
+    if cfg.remat == "none":
+        return fn
+    policy = (jax.checkpoint_policies.nothing_saveable if cfg.remat == "full"
+              else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn, policy=policy)
+
+
+# ---------------------------------------------------------------------------
+# full forward
+# ---------------------------------------------------------------------------
+
+def _layer_slice(layers, i):
+    return jax.tree.map(lambda a: a[i], layers)
+
+
+def forward(params, cfg: ArchConfig, x, positions):
+    """Backbone over embedded inputs x: (B, S, D) -> (B, S, D)."""
+    if not cfg.scan_layers:
+        return _forward_unrolled(params, cfg, x, positions)
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        blk = _maybe_remat(
+            lambda xx, p: (_dense_block(cfg, p, xx, positions)), cfg)
+
+        def body(carry, p):
+            xx, aux = carry
+            xx, a = blk(xx, p)
+            return (xx, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   params["layers"])
+    elif cfg.family == "ssm":
+        blk = _maybe_remat(lambda xx, p: _ssm_block(cfg, p, xx), cfg)
+        x, _ = jax.lax.scan(lambda xx, p: (blk(xx, p), None), x,
+                            params["layers"])
+        aux = jnp.zeros((), jnp.float32)
+    elif cfg.family == "hybrid":
+        aux = jnp.zeros((), jnp.float32)
+        period = cfg.attn_every
+        groups = cfg.n_layers // period
+        head_n = groups * period
+        head = jax.tree.map(
+            lambda a: a[:head_n].reshape(groups, period, *a.shape[1:]),
+            params["layers"])
+        tail = jax.tree.map(lambda a: a[head_n:], params["layers"])
+        blk = _maybe_remat(lambda xx, p: _ssm_block(cfg, p, xx), cfg)
+        shared = _maybe_remat(
+            lambda xx, p: _shared_block(cfg, p, xx, positions), cfg)
+
+        def group_body(xx, gp):
+            xx, _ = jax.lax.scan(lambda c, p: (blk(c, p), None), xx, gp)
+            xx = shared(xx, params["shared_attn"])
+            return xx, None
+
+        x, _ = jax.lax.scan(group_body, x, head)
+        if cfg.n_layers - head_n:
+            x, _ = jax.lax.scan(lambda c, p: (blk(c, p), None), x, tail)
+    else:
+        raise ValueError(cfg.family)
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), aux
+
+
+def _forward_unrolled(params, cfg: ArchConfig, x, positions):
+    """Python-loop variant (scan_layers=False): identical math, unrolled HLO.
+
+    Used by the roofline probes — XLA cost analysis counts a while-loop body
+    once, so per-layer FLOP/byte/collective numbers come from unrolled
+    small-L lowers and are scaled analytically."""
+    aux = jnp.zeros((), jnp.float32)
+    L = cfg.n_layers
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        for i in range(L):
+            x, a = _dense_block(cfg, _layer_slice(params["layers"], i), x,
+                                positions)
+            aux = aux + a
+    elif cfg.family == "ssm":
+        for i in range(L):
+            x = _ssm_block(cfg, _layer_slice(params["layers"], i), x)
+    elif cfg.family == "hybrid":
+        for i in range(L):
+            x = _ssm_block(cfg, _layer_slice(params["layers"], i), x)
+            if (i + 1) % cfg.attn_every == 0:
+                x = _shared_block(cfg, params["shared_attn"], x, positions)
+    else:
+        raise ValueError(cfg.family)
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), aux
+
+
+def embed_inputs(params, cfg: ArchConfig, batch):
+    """Family-specific input embedding.  Returns (x, positions, label_info)."""
+    if cfg.family == "vlm":
+        tok_x = embed(params["embed"], batch["tokens"])
+        x = jnp.concatenate([batch["patches"].astype(tok_x.dtype), tok_x], axis=1)
+    elif cfg.family == "audio":
+        # codes: (B, K, S) -> sum of per-codebook embeddings
+        K = cfg.n_codebooks
+        x = sum(embed(params["embed"][k], batch["codes"][:, k]) for k in range(K))
+    else:
+        x = embed(params["embed"], batch["tokens"])
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = constrain(x, ("act_batch", "act_seq", "act_embed"))
+    return x, positions
+
+
+def loss_fn(params, batch, cfg: ArchConfig):
+    """Causal LM loss over the batch.  Returns (loss, metrics)."""
+    x, positions = embed_inputs(params, cfg, batch)
+    h, aux = forward(params, cfg, x, positions)
+    labels = batch["labels"]
+    if cfg.family == "audio":
+        B, S, D = h.shape
+        logits = (h @ params["lm_head"]).reshape(B, S, cfg.n_codebooks, cfg.vocab)
+        logits = logits[:, :-1]
+        lbl = labels[:, :, 1:].transpose(0, 2, 1)  # (B,S-1,K)
+        loss = cross_entropy(logits, lbl)
+    else:
+        logits = h @ params["lm_head"]
+        logits = constrain(logits, ("act_batch", "act_seq", "act_vocab"))
+        loss = cross_entropy(logits[:, :-1], labels[:, 1:])
+    total = loss + 0.01 * aux
+    return total, {"loss": loss, "aux_loss": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode path (serve_step)
+# ---------------------------------------------------------------------------
+
+def init_decode_cache(cfg: ArchConfig, batch: int, max_len: int):
+    """Cache pytree + logical axes for one-token decoding."""
+    dt = cfg.jdtype
+    kv_dt = getattr(jnp, cfg.kv_dtype) if cfg.kv_dtype else dt
+    L = cfg.n_layers
+    if cfg.family == "ssm" or cfg.family == "hybrid":
+        d_inner = cfg.ssm_expand * cfg.d_model
+        nheads = d_inner // cfg.ssm_headdim
+        conv_c = d_inner + 2 * cfg.ssm_state
+        cache = {
+            "conv": jnp.zeros((L, batch, CONV_K - 1, conv_c), dt),
+            "ssm": jnp.zeros((L, batch, nheads, cfg.ssm_headdim, cfg.ssm_state), dt),
+        }
+        axes = {
+            "conv": ("layers", "act_batch", None, "act_ffn"),
+            "ssm": ("layers", "act_batch", None, None, None),
+        }
+        if cfg.family == "hybrid":
+            n_shared = cfg.n_layers // cfg.attn_every
+            cache["k"] = jnp.zeros((n_shared, batch, max_len, cfg.n_kv_heads, cfg.hd), dt)
+            cache["v"] = jnp.zeros_like(cache["k"])
+            axes["k"] = (None, "act_batch", None, "act_kv", "act_hd")
+            axes["v"] = axes["k"]
+        return cache, axes
+    cache = {
+        "k": jnp.zeros((L, batch, max_len, cfg.n_kv_heads, cfg.hd), kv_dt),
+        "v": jnp.zeros((L, batch, max_len, cfg.n_kv_heads, cfg.hd), kv_dt),
+    }
+    axes = {"k": ("layers", "act_batch", None, "act_kv", "act_hd"),
+            "v": ("layers", "act_batch", None, "act_kv", "act_hd")}
+    return cache, axes
+
+
+def decode_step(params, cache, tokens, cache_len, cfg: ArchConfig):
+    """One-token decode.  tokens: (B,1) int32 (audio: (B,K,1)).
+
+    Returns (logits, new_cache)."""
+    if cfg.family == "audio":
+        K = cfg.n_codebooks
+        x = sum(embed(params["embed"][k], tokens[:, k]) for k in range(K))
+    elif cfg.family == "vlm":
+        x = embed(params["embed"], tokens)
+    else:
+        x = embed(params["embed"], tokens)
+    x = constrain(x, ("act_batch", None, "act_embed"))
+
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        def body(xx, layer):
+            p, ck, cv = layer
+            h = rms_norm(xx, p["norm1"], cfg.norm_eps)
+            h, ck, cv = attention_decode(
+                p["attn"], h, ck, cv, cache_len, n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv_heads, head_dim=cfg.hd, qk_norm=cfg.qk_norm,
+                rope_theta=cfg.rope_theta, norm_eps=cfg.norm_eps)
+            xx = xx + h
+            h = rms_norm(xx, p["norm2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                h, _ = moe_block(p["moe"], h, top_k=cfg.top_k,
+                                 capacity_factor=cfg.capacity_factor)
+            else:
+                h = mlp_block(p["mlp"], h)
+            xx = xx + h
+            return xx, (ck, cv)
+
+        if cfg.scan_layers:
+            x, (k_new, v_new) = jax.lax.scan(
+                body, x, (params["layers"], cache["k"], cache["v"]))
+            new_cache = {"k": k_new, "v": v_new}
+        else:
+            ks, vs = [], []
+            for i in range(cfg.n_layers):
+                x, (ck, cv) = body(x, (_layer_slice(params["layers"], i),
+                                       cache["k"][i], cache["v"][i]))
+                ks.append(ck)
+                vs.append(cv)
+            new_cache = {"k": jnp.stack(ks), "v": jnp.stack(vs)}
+    elif cfg.family == "ssm":
+        def body(xx, layer):
+            p, conv, ssm = layer
+            h = rms_norm(xx, p["norm"], cfg.norm_eps)
+            h, new = mamba2_decode(p["mixer"], h, {"conv": conv, "ssm": ssm},
+                                   d_state=cfg.ssm_state, headdim=cfg.ssm_headdim,
+                                   expand=cfg.ssm_expand, norm_eps=cfg.norm_eps)
+            return xx + h, (new["conv"], new["ssm"])
+
+        if cfg.scan_layers:
+            x, (conv_new, ssm_new) = jax.lax.scan(
+                body, x, (params["layers"], cache["conv"], cache["ssm"]))
+            new_cache = {"conv": conv_new, "ssm": ssm_new}
+        else:
+            cs, ss = [], []
+            for i in range(cfg.n_layers):
+                x, (c1, s1) = body(x, (_layer_slice(params["layers"], i),
+                                       cache["conv"][i], cache["ssm"][i]))
+                cs.append(c1)
+                ss.append(s1)
+            new_cache = {"conv": jnp.stack(cs), "ssm": jnp.stack(ss)}
+    elif cfg.family == "hybrid" and not cfg.scan_layers:
+        def one(xx, p, conv, ssm):
+            h = rms_norm(xx, p["norm"], cfg.norm_eps)
+            h, new = mamba2_decode(p["mixer"], h, {"conv": conv, "ssm": ssm},
+                                   d_state=cfg.ssm_state, headdim=cfg.ssm_headdim,
+                                   expand=cfg.ssm_expand, norm_eps=cfg.norm_eps)
+            return xx + h, new
+
+        cs, ss, ks, vs = [], [], [], []
+        g = 0
+        for i in range(cfg.n_layers):
+            x, new = one(x, _layer_slice(params["layers"], i),
+                         cache["conv"][i], cache["ssm"][i])
+            cs.append(new["conv"])
+            ss.append(new["ssm"])
+            if (i + 1) % cfg.attn_every == 0 and g < cache["k"].shape[0]:
+                sp = params["shared_attn"]
+                h = rms_norm(x, sp["norm1"], cfg.norm_eps)
+                h, ck, cv = attention_decode(
+                    sp["attn"], h, cache["k"][g], cache["v"][g], cache_len,
+                    n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+                    rope_theta=cfg.rope_theta, norm_eps=cfg.norm_eps)
+                x = x + h
+                h = rms_norm(x, sp["norm2"], cfg.norm_eps)
+                x = x + mlp_block(sp["mlp"], h)
+                ks.append(ck)
+                vs.append(cv)
+                g += 1
+        while g < cache["k"].shape[0]:
+            ks.append(cache["k"][g])
+            vs.append(cache["v"][g])
+            g += 1
+        new_cache = {"conv": jnp.stack(cs), "ssm": jnp.stack(ss),
+                     "k": jnp.stack(ks) if ks else cache["k"],
+                     "v": jnp.stack(vs) if vs else cache["v"]}
+    elif cfg.family == "hybrid":
+        period = cfg.attn_every
+        groups = cfg.n_layers // period
+        head_n = groups * period
+
+        def ssm_body(xx, layer):
+            p, conv, ssm = layer
+            h = rms_norm(xx, p["norm"], cfg.norm_eps)
+            h, new = mamba2_decode(p["mixer"], h, {"conv": conv, "ssm": ssm},
+                                   d_state=cfg.ssm_state, headdim=cfg.ssm_headdim,
+                                   expand=cfg.ssm_expand, norm_eps=cfg.norm_eps)
+            return xx + h, (new["conv"], new["ssm"])
+
+        take = lambda a, lo, n: jax.tree.map(lambda t: t[lo:lo + n], a)
+        convs, ssms = [], []
+        ks, vs = [], []
+        for g in range(groups):
+            layer = (take(params["layers"], g * period, period),
+                     take(cache["conv"], g * period, period),
+                     take(cache["ssm"], g * period, period))
+            x, (c_new, s_new) = jax.lax.scan(ssm_body, x, layer)
+            convs.append(c_new)
+            ssms.append(s_new)
+            sp = params["shared_attn"]
+            h = rms_norm(x, sp["norm1"], cfg.norm_eps)
+            h, ck, cv = attention_decode(
+                sp["attn"], h, cache["k"][g], cache["v"][g], cache_len,
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+                rope_theta=cfg.rope_theta, norm_eps=cfg.norm_eps)
+            x = x + h
+            h = rms_norm(x, sp["norm2"], cfg.norm_eps)
+            x = x + mlp_block(sp["mlp"], h)
+            ks.append(ck)
+            vs.append(cv)
+        if cfg.n_layers - head_n:
+            layer = (take(params["layers"], head_n, cfg.n_layers - head_n),
+                     take(cache["conv"], head_n, cfg.n_layers - head_n),
+                     take(cache["ssm"], head_n, cfg.n_layers - head_n))
+            x, (c_new, s_new) = jax.lax.scan(ssm_body, x, layer)
+            convs.append(c_new)
+            ssms.append(s_new)
+        new_cache = {
+            "conv": jnp.concatenate(convs), "ssm": jnp.concatenate(ssms),
+            "k": jnp.stack(ks), "v": jnp.stack(vs),
+        }
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"]
+    if cfg.family == "audio":
+        B = x.shape[0]
+        logits = logits.reshape(B, 1, cfg.n_codebooks, cfg.vocab)
+    return logits, new_cache

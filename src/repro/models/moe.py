@@ -1,0 +1,123 @@
+"""Mixture-of-Experts layer: top-k routing, sort-based capacity dispatch.
+
+Dispatch is the production-style sort/gather formulation (token dropping at a
+capacity factor) rather than the textbook (tokens, experts, capacity) one-hot
+einsum — the one-hot tensor is O(T^2) at dbrx scale, while this version's
+working set is the dispatched activations (E, C, D) themselves.  All data
+movement is gathers, which GSPMD turns into all-to-all-style collectives when
+the expert axis is sharded over 'model' and tokens over 'data'.
+
+The LTRF connection (DESIGN.md §Arch-applicability): the activated experts'
+weight tiles are the per-interval register working set — the interval planner
+(`repro.core.plan`) bounds how many expert tiles stream through VMEM per step.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _init
+
+
+def init_moe(key, d_model, d_ff, n_experts, dtype):
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d_model)
+    params = {
+        "router": _init(ks[0], (d_model, n_experts), s, jnp.float32),
+        "w_gate": _init(ks[1], (n_experts, d_model, d_ff), s, dtype),
+        "w_up": _init(ks[2], (n_experts, d_model, d_ff), s, dtype),
+        "w_down": _init(ks[3], (n_experts, d_ff, d_model), 1.0 / math.sqrt(d_ff), dtype),
+    }
+    axes = {
+        "router": ("embed", None),
+        "w_gate": ("experts", "embed", "ffn"),
+        "w_up": ("experts", "embed", "ffn"),
+        "w_down": ("experts", "ffn", "embed"),
+    }
+    return params, axes
+
+
+def moe_block(params, x, *, top_k: int, capacity_factor: float = 1.25,
+              groups: int = 1):
+    """x: (B, S, D) -> ((B, S, D), aux_loss).
+
+    ``groups > 1`` dispatches each token group independently (per-group
+    capacity) — align groups with the token sharding and the argsort /
+    position bookkeeping become shard-local (no collective); only the
+    expert-gather itself crosses shards (the all-to-all).  This is the
+    standard grouped-dispatch formulation (t5x/MaxText)."""
+    B, S, D = x.shape
+    T = B * S
+    if groups > 1:
+        assert T % groups == 0, (T, groups)
+        xg = x.reshape(groups, T // groups, 1, D)
+        out, aux = jax.vmap(
+            lambda g: moe_block(params, g, top_k=top_k,
+                                capacity_factor=capacity_factor, groups=1)
+        )(xg)
+        return out.reshape(B, S, D), aux.mean()
+    E = params["router"].shape[1]
+    N = T * top_k
+    xt = x.reshape(T, D)
+
+    logits = xt.astype(jnp.float32) @ params["router"]          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)           # (T, k)
+    gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+
+    flat_e = gate_idx.reshape(-1)                               # (N,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    sorted_tok = (jnp.arange(N) // top_k)[order]
+
+    # one-hot count (vmap-safe, unlike bincount)
+    counts = (flat_e[:, None] == jnp.arange(E)[None, :]).sum(0)  # (E,)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+
+    C = max(1, int(capacity_factor * N / E))
+    slot = starts[:, None] + jnp.arange(C)[None, :]             # (E, C)
+    valid = jnp.arange(C)[None, :] < counts[:, None]
+    slot_tok = sorted_tok[jnp.clip(slot, 0, N - 1)]             # (E, C)
+
+    # Expert FFN in capacity chunks: the (E, chunk, d_ff) hidden working set
+    # is bounded regardless of C (the LTRF working-set idea applied to the
+    # expert pipeline), and the per-chunk gather streams tokens in.
+    c0 = min(C, 8192)
+    nch = -(-C // c0)
+    pad_c = nch * c0 - C
+    st = jnp.pad(slot_tok, ((0, 0), (0, pad_c))) if pad_c else slot_tok
+    vd = jnp.pad(valid, ((0, 0), (0, pad_c))) if pad_c else valid
+    st = st.reshape(E, nch, c0).transpose(1, 0, 2)              # (nch, E, c0)
+    vd = vd.reshape(E, nch, c0).transpose(1, 0, 2)
+
+    def expert_chunk(_, inp):
+        tok, ok = inp
+        xe = xt[tok] * ok[..., None].astype(x.dtype)            # (E, c0, D)
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, params["w_gate"])) \
+            * jnp.einsum("ecd,edf->ecf", xe, params["w_up"])
+        return None, jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+
+    _, ye = jax.lax.scan(expert_chunk, None, (st, vd))          # (nch, E, c0, D)
+    ye = ye.transpose(1, 0, 2, 3).reshape(E, nch * c0, D)[:, :C]  # (E, C, D)
+
+    pos = jnp.arange(N) - starts[sorted_e]                      # (N,)
+    kept = pos < C
+    ye_n = ye[sorted_e, jnp.clip(pos, 0, C - 1)]                # (N, D)
+    ye_n = ye_n * kept[:, None].astype(x.dtype)
+    inv = jnp.argsort(order)
+    y = (ye_n[inv].reshape(T, top_k, D)
+         * gate_vals[..., None].astype(x.dtype)).sum(axis=1)
+
+    # auxiliary load-balance loss (Switch-style)
+    me = probs.mean(0)
+    ce = (counts / max(N, 1)).astype(jnp.float32)
+    aux = E * jnp.sum(me * ce)
+    return y.reshape(B, S, D), aux
+
+
+def moe_flops_per_token(d_model: int, d_ff: int, top_k: int) -> int:
+    """Active FLOPs per token for the expert MLPs (fwd): 3 matmuls x top_k."""
+    return 2 * 3 * d_model * d_ff * top_k

@@ -1,0 +1,10 @@
+from .train_step import (
+    batch_axes_for, batch_shardings, build_decode_step, build_eval_step,
+    build_prefill_step, build_train_step, make_train_state, state_shardings,
+)
+
+__all__ = [
+    "batch_axes_for", "batch_shardings", "build_decode_step",
+    "build_eval_step", "build_prefill_step", "build_train_step",
+    "make_train_state", "state_shardings",
+]

@@ -1,0 +1,6 @@
+from .allocator import AddressAllocationUnit
+from .scheduler import PAGE_TOKENS, Request, TwoLevelScheduler
+from .engine import ServeConfig, ServingEngine
+
+__all__ = ["AddressAllocationUnit", "PAGE_TOKENS", "Request",
+           "TwoLevelScheduler", "ServeConfig", "ServingEngine"]

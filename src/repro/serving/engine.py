@@ -1,0 +1,78 @@
+"""Batched serving engine: continuous batching over the unified decode step.
+
+Couples the two-level request scheduler (paged KV via the Address Allocation
+Unit) with the jitted `decode_step`.  The device-side cache is a dense
+(L, B_slots, S_max, kv, hd) ring indexed by active slot; the scheduler's page
+accounting decides *which* requests own slots — on real hardware the page
+table would also drive a gather, which we fold into slot assignment here
+(one request per slot, contiguous history).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.lm import decode_step, init_decode_cache, init_params
+
+from .allocator import AddressAllocationUnit
+from .scheduler import PAGE_TOKENS, TwoLevelScheduler, Request
+
+
+@dataclass
+class ServeConfig:
+    max_len: int = 512
+    active_slots: int = 8
+    total_pages: int = 64
+
+
+class ServingEngine:
+    def __init__(self, cfg: ArchConfig, params=None, sc: ServeConfig | None = None,
+                 key=None):
+        self.cfg = cfg
+        self.sc = sc or ServeConfig()
+        key = key if key is not None else jax.random.PRNGKey(0)
+        self.params = params if params is not None else init_params(cfg, key)[0]
+        self.aau = AddressAllocationUnit(self.sc.total_pages)
+        self.sched = TwoLevelScheduler(self.aau, active_slots=self.sc.active_slots)
+        self.cache, _ = init_decode_cache(cfg, self.sc.active_slots,
+                                          self.sc.max_len)
+        self._decode = jax.jit(
+            lambda p, c, t, n: decode_step(p, c, t, n, cfg))
+        self.tokens = np.zeros((self.sc.active_slots, 1), np.int32)
+        self.generated: dict[int, list[int]] = {}
+
+    def submit(self, prompt: list[int], max_new_tokens: int = 16) -> Request:
+        r = self.sched.submit(len(prompt), max_new_tokens)
+        self.generated[r.rid] = []
+        return r
+
+    def run(self, max_steps: int = 4096) -> dict[int, list[int]]:
+        """Greedy-decode all submitted requests to completion."""
+        self.sched.admit()
+        cache_len = 0
+        steps = 0
+        while (self.sched.active or self.sched.waiting) and steps < max_steps:
+            steps += 1
+            toks = jnp.asarray(self.tokens)
+            if self.cfg.family == "audio":
+                toks = jnp.broadcast_to(
+                    toks[:, None, :], (toks.shape[0], self.cfg.n_codebooks, 1))
+            logits, self.cache = self._decode(
+                self.params, self.cache, toks,
+                jnp.int32(min(cache_len, self.sc.max_len - 1)))
+            nxt = np.asarray(jnp.argmax(
+                logits[..., -1, :] if self.cfg.family != "audio"
+                else logits[:, -1, :, :], axis=-1))
+            for i, r in enumerate(list(self.sched.active)):
+                if i >= self.tokens.shape[0]:
+                    break
+                tok = int(nxt[i] if np.ndim(nxt[i]) == 0 else np.ravel(nxt[i])[0])
+                self.generated[r.rid].append(tok)
+                self.tokens[i, 0] = tok
+            cache_len = min(cache_len + 1, self.sc.max_len - 1)
+            self.sched.step()
+        return self.generated

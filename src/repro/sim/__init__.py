@@ -1,0 +1,11 @@
+from .engine import SimConfig, SimResult, Simulator, simulate, DESIGNS
+from .designs import (
+    TABLE2, baseline_config, design_config, max_tolerable_latency,
+    normalized_ipc, run,
+)
+
+__all__ = [
+    "SimConfig", "SimResult", "Simulator", "simulate", "DESIGNS",
+    "TABLE2", "baseline_config", "design_config", "max_tolerable_latency",
+    "normalized_ipc", "run",
+]

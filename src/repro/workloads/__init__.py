@@ -1,0 +1,3 @@
+from .suite import WORKLOADS, Workload, get_workload, listing1_program
+
+__all__ = ["WORKLOADS", "Workload", "get_workload", "listing1_program"]

@@ -1,0 +1,154 @@
+"""Unit + property tests for register-interval formation (Algorithms 1 & 2)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import form_register_intervals, parse_asm
+from repro.core.ir import back_edges, reachable_blocks
+from repro.workloads import WORKLOADS, listing1_program
+from repro.workloads.synth import SynthSpec, synthesize
+
+
+def all_programs():
+    progs = [("listing1", listing1_program())]
+    progs += [(w.name, w.program) for w in WORKLOADS.values()]
+    return progs
+
+
+@pytest.mark.parametrize("ncap", [4, 8, 16, 32])
+@pytest.mark.parametrize("name,prog", all_programs())
+def test_single_entry_property(name, prog, ncap):
+    an = form_register_intervals(prog, n_cap=ncap)
+    headers = {iv.iid: iv.header for iv in an.intervals}
+    for bb in an.prog:
+        i = an.block_interval[bb.label]
+        for s in bb.succs:
+            j = an.block_interval[s]
+            if i != j:
+                assert s == headers[j], "inter-interval edge must enter at header"
+
+
+@pytest.mark.parametrize("ncap", [4, 8, 16, 32])
+@pytest.mark.parametrize("name,prog", all_programs())
+def test_working_set_cap(name, prog, ncap):
+    an = form_register_intervals(prog, n_cap=ncap)
+    for iv in an.intervals:
+        worst_instr = max(
+            (len(set(ins.regs)) for b in iv.blocks for ins in an.prog.blocks[b].instrs),
+            default=0,
+        )
+        assert len(iv.working_set) <= max(ncap, worst_instr)
+
+
+@pytest.mark.parametrize("name,prog", all_programs())
+def test_partition_is_total_and_disjoint(name, prog):
+    an = form_register_intervals(prog, n_cap=16)
+    seen = {}
+    for iv in an.intervals:
+        for b in iv.blocks:
+            assert b not in seen, f"block {b} in two intervals"
+            seen[b] = iv.iid
+    assert set(seen) == set(an.prog.order)
+    for b, i in an.block_interval.items():
+        assert seen[b] == i
+
+
+def test_instructions_preserved_by_splitting():
+    prog = listing1_program()
+    an = form_register_intervals(prog, n_cap=2)  # forces splits
+    assert an.prog.num_instrs() == prog.num_instrs()
+    orig = [i.render() for _, _, i in prog.instructions()]
+    new = [i.render() for _, _, i in an.prog.instructions()]
+    assert sorted(orig) == sorted(new)
+
+
+def test_loop_is_single_interval_when_it_fits():
+    """Paper Fig. 5: pass 2 folds a whole loop into one interval."""
+    prog = parse_asm("""
+        mov r0, 0
+        mov r1, 100
+    LO: nop
+        add r2, r0, r1
+    LI: add r3, r2, r0
+        set p0, r3, r1
+        @p0 bra LI
+        add r0, r0, 1
+        set p1, r0, r1
+        @p1 bra LO
+        exit
+    """)
+    an = form_register_intervals(prog, n_cap=16)
+    # everything fits -> a single interval containing both nested loops
+    assert len(an.intervals) == 1
+    be = back_edges(an.prog)
+    assert len(be) == 2  # structure intact
+
+
+def test_pass2_respects_cap():
+    prog = listing1_program()
+    an1 = form_register_intervals(prog, n_cap=4, run_pass2=False)
+    an2 = form_register_intervals(prog, n_cap=4, run_pass2=True)
+    assert len(an2.intervals) <= len(an1.intervals)
+    for iv in an2.intervals:
+        assert len(iv.working_set) <= 4
+
+
+def test_listing1_loop_fits_with_cap7():
+    """With cap >= 7 (r0..r6) the whole Listing-1 kernel is one interval."""
+    an = form_register_intervals(listing1_program(), n_cap=7)
+    assert len(an.intervals) == 1
+
+
+def test_strand_mode_terminates_at_loads():
+    prog = listing1_program()
+    strands = form_register_intervals(prog, n_cap=16, strand_mode=True)
+    intervals = form_register_intervals(prog, n_cap=16)
+    # strands split after memory ops and skip pass 2 -> strictly more regions
+    assert len(strands.intervals) > len(intervals.intervals)
+    for iv in strands.intervals:
+        mem_positions = []
+        seq = [ins for b in iv.blocks for ins in strands.prog.blocks[b].instrs]
+        for k, ins in enumerate(seq):
+            if ins.is_mem:
+                mem_positions.append(k)
+        # a memory op inside a strand may only be the last instruction of its block
+    assert strands.prog.num_instrs() == prog.num_instrs()
+
+
+def test_call_blocks_are_solo_intervals():
+    prog = parse_asm("""
+        mov r0, 1
+        add r1, r0, r0
+        call helper
+        add r2, r1, r0
+        exit
+    """)
+    an = form_register_intervals(prog, n_cap=16)
+    solo = [iv for iv in an.intervals if iv.solo]
+    assert len(solo) == 1
+    blocks = solo[0].blocks
+    instrs = [i for b in blocks for i in an.prog.blocks[b].instrs]
+    assert len(instrs) == 1 and instrs[0].op == "call"
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    n_regs=st.integers(6, 48),
+    depth=st.integers(0, 3),
+    body=st.integers(4, 24),
+    mem=st.floats(0.0, 0.6),
+    diamonds=st.integers(0, 2),
+    ncap=st.sampled_from([4, 8, 16, 32]),
+)
+def test_property_interval_invariants(seed, n_regs, depth, body, mem, diamonds, ncap):
+    spec = SynthSpec(name="prop", seed=seed, n_regs=n_regs, loop_depth=depth,
+                     body_len=body, mem_ratio=mem, diamonds=diamonds,
+                     trips=tuple([3] * max(depth, 1)))
+    prog, _ = synthesize(spec)
+    an = form_register_intervals(prog, n_cap=ncap)
+    an.validate()
+    # instruction multiset preserved
+    assert an.prog.num_instrs() == prog.num_instrs()
+    # every reachable block assigned
+    for b in reachable_blocks(an.prog):
+        assert b in an.block_interval

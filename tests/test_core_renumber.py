@@ -1,0 +1,213 @@
+"""Tests for liveness, ICG, coloring, renumbering and prefetch accounting."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    build_icg, chaitin_color, form_register_intervals, parse_asm,
+    prefetch_schedule, renumber_registers,
+)
+from repro.core.liveness import annotate_dead_operands, block_liveness, build_live_ranges
+from repro.core.renumber import bank_of
+from repro.workloads import WORKLOADS, listing1_program
+from repro.workloads.synth import SynthSpec, synthesize
+
+
+# ---------------------------------------------------------------------------
+# semantic equivalence oracle: interpret a program before/after renumbering
+# ---------------------------------------------------------------------------
+
+def interpret(prog, max_steps=20_000):
+    """Tiny concrete interpreter: registers hold ints; ld hashes the address;
+    loops bounded by max_steps. Returns the trace of (op, computed value)."""
+    regs: dict[int, int] = {}
+    preds: dict[int, bool] = {}
+    label = prog.entry
+    idx = 0
+    trace = []
+    steps = 0
+    order = prog.order
+
+    def val(r):
+        return regs.get(r, r * 7 + 3)  # deterministic initial values
+
+    while steps < max_steps:
+        steps += 1
+        bb = prog.blocks[label]
+        if idx >= len(bb.instrs):
+            i = order.index(label)
+            if i + 1 >= len(order):
+                break
+            label, idx = order[i + 1], 0
+            continue
+        ins = bb.instrs[idx]
+        taken = all(preds.get(p, (steps % 3 == 0)) for p in ins.psrcs) if ins.psrcs else True
+        if ins.op == "exit":
+            break
+        if ins.op == "bra":
+            if taken:
+                label, idx = ins.target, 0
+                continue
+            idx += 1
+            continue
+        if ins.op == "set":
+            v = int(val(ins.srcs[0]) < val(ins.srcs[1])) if len(ins.srcs) >= 2 else 1
+            preds[ins.pdst] = bool(v)
+            trace.append(("set", v))
+            idx += 1
+            continue
+        srcs = [val(s) for s in ins.srcs]
+        if ins.op == "ld":
+            v = (srcs[0] * 2654435761) % 1000003 if srcs else 17
+        elif ins.op == "mul":
+            v = (srcs[0] * srcs[1]) % 1_000_003 if len(srcs) > 1 else srcs[0]
+        elif ins.op in ("add", "mad", "sub"):
+            v = sum(srcs) % 1_000_003
+        elif ins.op == "mov":
+            v = srcs[0] if srcs else 1
+        else:
+            v = sum(srcs) % 1_000_003 if srcs else 0
+        for d in ins.dsts:
+            regs[d] = v
+        if ins.dsts:
+            trace.append((ins.op, v))
+        idx += 1
+    return trace
+
+
+@pytest.mark.parametrize("name", sorted(WORKLOADS))
+def test_renumbering_preserves_semantics(name):
+    w = WORKLOADS[name]
+    an = form_register_intervals(w.program, n_cap=16)
+    rr = renumber_registers(an, num_banks=16)
+    assert interpret(an.prog) == interpret(rr.prog)
+
+
+def test_renumbering_preserves_semantics_listing1():
+    an = form_register_intervals(listing1_program(), n_cap=4)
+    rr = renumber_registers(an, num_banks=4, scheme="grouped")
+    assert interpret(an.prog) == interpret(rr.prog)
+
+
+def test_listing1_walkthrough_conflict_free():
+    """Paper §4.3: with 4 banks x 2 regs, renumbering removes all conflicts."""
+    an = form_register_intervals(listing1_program(), n_cap=4)
+    pre = prefetch_schedule(an, num_banks=4, scheme="grouped", regs_per_bank=2)
+    assert any(op.conflicts > 0 for op in pre)  # conflicts exist before
+    rr = renumber_registers(an, num_banks=4, scheme="grouped", regs_per_bank=2)
+    post = prefetch_schedule(rr.analysis, num_banks=4, scheme="grouped", regs_per_bank=2)
+    assert all(op.conflicts == 0 for op in post)
+    assert not rr.coloring.uncolorable
+
+
+def test_coloring_valid_on_colorable_graph():
+    adj = {0: {1, 2}, 1: {0, 2}, 2: {0, 1}, 3: {0}}
+    col = chaitin_color(adj, 3)
+    assert not col.uncolorable
+    assert col.conflicts(adj) == 0
+
+
+def test_coloring_balanced():
+    # 8 independent nodes over 4 colors -> exactly 2 of each
+    adj = {i: set() for i in range(8)}
+    col = chaitin_color(adj, 4)
+    from collections import Counter
+    assert set(Counter(col.colors.values()).values()) == {2}
+
+
+def test_coloring_overconstrained_reports_conflicts():
+    n = 6
+    adj = {i: set(range(n)) - {i} for i in range(n)}  # K6
+    col = chaitin_color(adj, 4)
+    assert col.uncolorable
+    assert col.conflicts(adj) >= 1
+
+
+def test_bank_of_schemes():
+    assert bank_of(5, 4, "interleaved") == 1
+    assert bank_of(5, 4, "grouped", 2) == 2
+    assert bank_of(9, 4, "grouped", 2) == 0  # wraps
+
+
+@pytest.mark.parametrize("name", sorted(WORKLOADS))
+def test_renumbering_never_increases_max_conflicts(name):
+    w = WORKLOADS[name]
+    an = form_register_intervals(w.program, n_cap=16)
+    pre = prefetch_schedule(an, num_banks=16)
+    rr = renumber_registers(an, num_banks=16)
+    post = prefetch_schedule(rr.analysis, num_banks=16)
+    assert max(o.conflicts for o in post) <= max(o.conflicts for o in pre)
+
+
+def test_suite_conflict_free_fraction_improves():
+    """Aggregate §7.3 trend: renumbering raises the conflict-free fraction."""
+    pre_free = post_free = total = 0
+    for w in WORKLOADS.values():
+        an = form_register_intervals(w.program, n_cap=16)
+        pre = prefetch_schedule(an, num_banks=16)
+        rr = renumber_registers(an, num_banks=16)
+        post = prefetch_schedule(rr.analysis, num_banks=16)
+        pre_free += sum(1 for o in pre if o.conflicts == 0)
+        post_free += sum(1 for o in post if o.conflicts == 0)
+        total += len(pre)
+    assert post_free > pre_free
+    assert post_free / total > 0.5  # paper: 88% at cap 16
+
+
+def test_dead_operand_annotation():
+    prog = parse_asm("""
+        mov r0, 1
+        add r1, r0, r0
+        add r2, r1, r1
+        exit
+    """)
+    annotate_dead_operands(prog)
+    instrs = [i for _, _, i in prog.instructions()]
+    # r0 dies after the first add; r1 dies after the second
+    assert instrs[1].dead_srcs == (0, 1)
+    assert instrs[2].dead_srcs == (0, 1)
+
+
+def test_liveness_basic():
+    prog = parse_asm("""
+        mov r0, 1
+    L1: add r1, r0, r0
+        set p0, r1, r0
+        @p0 bra L1
+        exit
+    """)
+    live_in, live_out = block_liveness(prog)
+    assert 0 in live_in["L1"]  # r0 live around the loop
+
+
+def test_live_ranges_webs():
+    # r0 has two independent webs (no path connects def2's value to use1)
+    prog = parse_asm("""
+        mov r0, 1
+        add r1, r0, r0
+        mov r0, 2
+        add r2, r0, r0
+        exit
+    """)
+    ranges, occ = build_live_ranges(prog)
+    r0_ranges = [lr for lr in ranges if lr.reg == 0]
+    assert len(r0_ranges) == 2
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    n_regs=st.integers(6, 40),
+    depth=st.integers(0, 2),
+    body=st.integers(4, 16),
+    banks=st.sampled_from([4, 8, 16]),
+)
+def test_property_renumber_semantics_and_conflicts(seed, n_regs, depth, body, banks):
+    spec = SynthSpec(name="prop", seed=seed, n_regs=n_regs, loop_depth=depth,
+                     body_len=body, mem_ratio=0.3, trips=tuple([3] * max(depth, 1)))
+    prog, _ = synthesize(spec)
+    an = form_register_intervals(prog, n_cap=16)
+    rr = renumber_registers(an, num_banks=banks)
+    assert interpret(an.prog) == interpret(rr.prog)
+    pre = prefetch_schedule(an, num_banks=banks)
+    post = prefetch_schedule(rr.analysis, num_banks=banks)
+    assert max(o.conflicts for o in post) <= max(o.conflicts for o in pre)

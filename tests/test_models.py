@@ -1,0 +1,173 @@
+"""Per-architecture smoke tests: reduced configs, one forward/train step and
+one decode step on CPU, asserting output shapes and finiteness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_arch, get_smoke
+from repro.models import decode_step, init_decode_cache, init_params, loss_fn
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+
+B, S = 2, 64
+
+
+def _batch(cfg):
+    if cfg.family == "vlm":
+        return {"tokens": jnp.ones((B, S - cfg.n_patches), jnp.int32),
+                "patches": jnp.zeros((B, cfg.n_patches, cfg.d_model), cfg.jdtype),
+                "labels": jnp.ones((B, S), jnp.int32)}
+    if cfg.family == "audio":
+        return {"codes": jnp.ones((B, cfg.n_codebooks, S), jnp.int32),
+                "labels": jnp.ones((B, cfg.n_codebooks, S), jnp.int32)}
+    return {"tokens": jnp.ones((B, S), jnp.int32),
+            "labels": jnp.ones((B, S), jnp.int32)}
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_smoke_forward_loss(arch_id):
+    cfg = get_smoke(arch_id)
+    params, axes = init_params(cfg, jax.random.PRNGKey(0))
+    assert jax.tree.structure(params) == jax.tree.structure(
+        axes, is_leaf=lambda x: isinstance(x, tuple))
+    loss, metrics = jax.jit(lambda p, b: loss_fn(p, b, cfg))(params, _batch(cfg))
+    assert jnp.isfinite(loss), arch_id
+    assert float(loss) > 0
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_smoke_train_step_no_nans(arch_id):
+    cfg = get_smoke(arch_id)
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+
+    @jax.jit
+    def step(p, o, b):
+        (loss, _), g = jax.value_and_grad(
+            lambda pp: loss_fn(pp, b, cfg), has_aux=True)(p)
+        return adamw_update(AdamWConfig(lr=1e-3), p, g, o) + (loss,)
+
+    p2, o2, m, loss = step(params, opt, _batch(cfg))
+    for leaf in jax.tree.leaves(p2):
+        assert np.isfinite(np.asarray(leaf, np.float32)).all(), arch_id
+    assert jnp.isfinite(m["grad_norm"])
+    assert float(m["grad_norm"]) > 0
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_smoke_decode_step(arch_id):
+    cfg = get_smoke(arch_id)
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    cache, _ = init_decode_cache(cfg, B, 32)
+    tok = (jnp.ones((B, cfg.n_codebooks, 1), jnp.int32)
+           if cfg.family == "audio" else jnp.ones((B, 1), jnp.int32))
+    logits, cache2 = jax.jit(
+        lambda p, c, t: decode_step(p, c, t, jnp.int32(3), cfg))(params, cache, tok)
+    if cfg.family == "audio":
+        assert logits.shape == (B, 1, cfg.n_codebooks, cfg.vocab)
+    else:
+        assert logits.shape == (B, 1, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    # cache structurally unchanged
+    assert jax.tree.structure(cache2) == jax.tree.structure(cache)
+
+
+@pytest.mark.parametrize("arch_id", ["tinyllama-1.1b", "mamba2-1.3b",
+                                     "zamba2-1.2b", "granite-moe-3b-a800m"])
+def test_unrolled_matches_scanned(arch_id):
+    """scan_layers=False must compute the same function (roofline probes)."""
+    import dataclasses
+    cfg = get_smoke(arch_id)
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    l1, _ = jax.jit(lambda p, b: loss_fn(p, b, cfg))(params, batch)
+    cfg2 = dataclasses.replace(cfg, scan_layers=False)
+    l2, _ = jax.jit(lambda p, b: loss_fn(p, b, cfg2))(params, batch)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=2e-2, atol=1e-3)
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_full_configs_match_assignment(arch_id):
+    """The full configs carry the exact assigned hyperparameters."""
+    cfg = get_arch(arch_id)
+    expect = {
+        "phi3-medium-14b": (40, 5120, 40, 10, 17920, 100352),
+        "tinyllama-1.1b": (22, 2048, 32, 4, 5632, 32000),
+        "granite-20b": (52, 6144, 48, 1, 24576, 49152),
+        "qwen3-0.6b": (28, 1024, 16, 8, 3072, 151936),
+        "granite-moe-3b-a800m": (32, 1536, 24, 8, 512, 49155),
+        "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+        "llava-next-34b": (60, 7168, 56, 8, 20480, 64000),
+        "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+        "mamba2-1.3b": (48, 2048, 0, 0, 0, 50280),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+    }[arch_id]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab)
+    assert got == expect, (arch_id, got, expect)
+    if arch_id == "granite-moe-3b-a800m":
+        assert (cfg.n_experts, cfg.top_k) == (40, 8)
+    if arch_id == "dbrx-132b":
+        assert (cfg.n_experts, cfg.top_k) == (16, 4)
+    if arch_id == "mamba2-1.3b":
+        assert cfg.ssm_state == 128
+    if arch_id == "zamba2-1.2b":
+        assert cfg.ssm_state == 64 and cfg.attn_every == 6
+    if arch_id == "qwen3-0.6b":
+        assert cfg.qk_norm
+
+
+def test_param_count_sane():
+    # analytic parameter counts should be in the right ballpark
+    assert 13e9 < get_arch("phi3-medium-14b").param_count() < 16e9
+    assert 0.9e9 < get_arch("tinyllama-1.1b").param_count() < 1.4e9
+    assert 110e9 < get_arch("dbrx-132b").param_count() < 150e9
+    dbrx = get_arch("dbrx-132b")
+    assert dbrx.active_param_count() < dbrx.param_count() / 2
+
+
+def test_decode_matches_prefill_logits():
+    """Decoding token-by-token must match teacher-forced forward logits."""
+    from repro.models.lm import embed_inputs, forward
+    cfg = get_smoke("tinyllama-1.1b")
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0, cfg.vocab)
+    # teacher-forced
+    x, pos = embed_inputs(params, cfg, {"tokens": toks})
+    h, _ = forward(params, cfg, x, pos)
+    full_logits = h @ params["lm_head"]
+    # step-by-step
+    cache, _ = init_decode_cache(cfg, 1, 16)
+    outs = []
+    for t in range(8):
+        logits, cache = decode_step(params, cache, toks[:, t:t + 1],
+                                    jnp.int32(t), cfg)
+        outs.append(logits[:, 0])
+    dec_logits = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec_logits, np.float32),
+                               np.asarray(full_logits, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_fp8_kv_cache_decode_close_to_bf16():
+    """Quantized (fp8) KV cache: half the decode memory, logits stay close."""
+    import dataclasses
+    from repro.configs import get_smoke
+    cfg = get_smoke("musicgen-large")
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jnp.ones((2, cfg.n_codebooks, 1), jnp.int32)
+
+    def run(kv_dtype):
+        c = dataclasses.replace(cfg, kv_dtype=kv_dtype)
+        cache, _ = init_decode_cache(c, 2, 16)
+        logits = None
+        for t in range(4):
+            logits, cache = decode_step(params, cache, toks, jnp.int32(t), c)
+        return np.asarray(logits, np.float32)
+
+    a = run("")                      # bf16 cache
+    b = run("float8_e4m3fn")         # fp8 cache
+    assert b.nbytes == a.nbytes      # logits same shape/dtype
+    # fp8 quantization noise is visible but bounded
+    np.testing.assert_allclose(a, b, rtol=0.35, atol=0.6)
+    assert np.corrcoef(a.ravel(), b.ravel())[0, 1] > 0.98

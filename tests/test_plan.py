@@ -1,0 +1,73 @@
+"""Tests for the TPU-side IntervalPlan (the paper's analysis on layer graphs)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.plan import (
+    IntervalPlan, LayerNode, Tile, plan_for_matmul, plan_layer_stream,
+)
+
+MB = 2 ** 20
+
+
+def _layers(n, tiles_per_layer, tile_mb):
+    return [LayerNode(name=f"layer{i}",
+                      tiles=[Tile(f"t{i}_{j}", tile_mb * MB)
+                             for j in range(tiles_per_layer)])
+            for i in range(n)]
+
+
+def test_small_model_single_interval():
+    plan = plan_layer_stream(_layers(4, 2, 1), vmem_budget=64 * MB)
+    assert plan.num_intervals == 1
+    assert plan.max_interval_bytes() <= 64 * MB
+    plan.validate()
+
+
+def test_big_model_streams_in_intervals():
+    plan = plan_layer_stream(_layers(16, 4, 8), vmem_budget=64 * MB)
+    assert plan.num_intervals > 1
+    assert plan.max_interval_bytes() <= 64 * MB
+    plan.validate()
+    # every layer is covered by exactly one prefetch
+    covered = [l for p in plan.prefetches for l in p.layer_names]
+    assert sorted(covered) == sorted(set(covered))
+
+
+def test_slots_conflict_free_within_round():
+    plan = plan_layer_stream(_layers(8, 2, 8), vmem_budget=32 * MB,
+                             num_slots=4)
+    for p in plan.prefetches:
+        if len(p.tiles) <= plan.num_slots:
+            slots = [p.slots[t.name] for t in p.tiles]
+            assert len(set(slots)) == len(slots)
+
+
+def test_matmul_plan_counts_tiles():
+    plan = plan_for_matmul(m=1024, k=2048, n=1024, bk=512, bn=512,
+                           vmem_budget=16 * MB)
+    all_tiles = {t.name for p in plan.prefetches for t in p.tiles}
+    assert len(all_tiles) == (2048 // 512) * (1024 // 512)
+    plan.validate()
+
+
+def test_shared_tiles_fetched_once_per_interval():
+    # two layers share a tile (zamba2's shared attention block)
+    shared = Tile("shared", 4 * MB)
+    layers = [
+        LayerNode("a", [Tile("wa", 4 * MB), shared]),
+        LayerNode("b", [Tile("wb", 4 * MB), shared]),
+    ]
+    plan = plan_layer_stream(layers, vmem_budget=64 * MB)
+    assert plan.num_intervals == 1
+    names = [t.name for t in plan.prefetches[0].tiles]
+    assert names.count("shared") == 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 12), tiles=st.integers(1, 4), mb=st.integers(1, 16),
+       budget=st.sampled_from([32, 64, 128]))
+def test_plan_property_budget_respected(n, tiles, mb, budget):
+    plan = plan_layer_stream(_layers(n, tiles, mb), vmem_budget=budget * MB)
+    plan.validate()
+    for p in plan.prefetches:
+        assert p.bytes <= budget * MB or len(p.tiles) == 1

@@ -1,0 +1,218 @@
+"""Runtime substrate tests: data pipeline, checkpointing, fault tolerance,
+elastic resharding, gradient compression, optimizer."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+from repro.configs import get_smoke
+from repro.configs.base import ShapeConfig
+from repro.data import DataConfig, PrefetchingLoader, batch_for_step
+from repro.distributed.elastic import degraded_mesh, reshard_state
+from repro.distributed.fault import (
+    FaultConfig, FaultTolerantTrainer, SimulatedFailure,
+)
+from repro.optim.adamw import (
+    AdamWConfig, adamw_update, global_norm, init_opt_state, lr_schedule,
+)
+from repro.optim.compression import CompressionConfig, compress_gradients
+
+CFG = get_smoke("tinyllama-1.1b")
+SHAPE = ShapeConfig("t", 32, 4, "train")
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_per_step():
+    a = batch_for_step(CFG, SHAPE, 7)
+    b = batch_for_step(CFG, SHAPE, 7)
+    c = batch_for_step(CFG, SHAPE, 8)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_loader_prefetch_and_restore():
+    loader = PrefetchingLoader(CFG, SHAPE, DataConfig(seed=5, depth=2))
+    try:
+        b0 = loader.get()
+        b1 = loader.get()
+        loader.restore(0)
+        b0_again = loader.get()
+        np.testing.assert_array_equal(b0["tokens"], b0_again["tokens"])
+        assert not np.array_equal(b0["tokens"], b1["tokens"])
+    finally:
+        loader.close()
+
+
+def test_loader_straggler_fallback():
+    loader = PrefetchingLoader(CFG, SHAPE, DataConfig(seed=5, timeout_s=0.0))
+    try:
+        # zero deadline forces the synchronous fallback path
+        b = loader.get()
+        assert b["tokens"].shape == (4, 32)
+    finally:
+        loader.close()
+
+
+def test_host_slice():
+    full = batch_for_step(CFG, SHAPE, 3)
+    half = batch_for_step(CFG, SHAPE, 3, host_slice=slice(0, 2))
+    np.testing.assert_array_equal(full["tokens"][:2], half["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def _tree():
+    return {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones((2,), jnp.int32)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    ck = Checkpointer(tmp_path)
+    t = _tree()
+    ck.save(5, t)
+    assert ck.latest_step() == 5
+    out = ck.restore(5, t)
+    for x, y in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_checkpoint_async_and_gc(tmp_path):
+    ck = Checkpointer(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save_async(s, _tree())
+    ck.wait()
+    ck.save(5, _tree())
+    steps = ck.all_steps()
+    assert len(steps) <= 2 and 5 in steps
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    ck = Checkpointer(tmp_path)
+    path = ck.save(1, _tree())
+    # corrupt the array file
+    data = np.load(path / "arrays.npz")
+    arrays = {k: np.array(data[k]) for k in data.files}
+    arrays["a0"] = arrays["a0"] + 1
+    np.savez(path / "arrays.npz", **arrays)
+    with pytest.raises(IOError):
+        ck.restore(1, _tree())
+
+
+def test_checkpoint_shape_mismatch(tmp_path):
+    ck = Checkpointer(tmp_path)
+    ck.save(1, _tree())
+    bad = {"a": jnp.zeros((2, 2)), "b": {"c": jnp.ones((2,), jnp.int32)}}
+    with pytest.raises(ValueError):
+        ck.restore(1, bad)
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance (end to end)
+# ---------------------------------------------------------------------------
+
+def test_fault_tolerant_training_replays_exactly(tmp_path):
+    from repro.launch.train import train
+    # run A: no failures
+    a = train("tinyllama-1.1b", steps=12, batch=4, seq=32,
+              ckpt_dir=str(tmp_path / "a"), ckpt_every=5)
+    # run B: two injected failures mid-run
+    b = train("tinyllama-1.1b", steps=12, batch=4, seq=32,
+              ckpt_dir=str(tmp_path / "b"), ckpt_every=5,
+              inject_failures={7: 1, 9: 1})
+    assert b["restarts"] == 2
+    assert a["final_step"] == b["final_step"] == 12
+    # deterministic data + exact replay => identical final parameters
+    pa = jax.tree.leaves(a["state"]["params"])
+    pb = jax.tree.leaves(b["state"]["params"])
+    for x, y in zip(pa, pb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_fault_trainer_gives_up_after_retries(tmp_path):
+    def bad_step(state, batch):
+        raise RuntimeError("always broken")
+
+    loader = PrefetchingLoader(CFG, SHAPE, DataConfig())
+    try:
+        tr = FaultTolerantTrainer(
+            step_fn=bad_step, checkpointer=Checkpointer(tmp_path),
+            loader=loader, cfg=FaultConfig(max_retries=2))
+        with pytest.raises(RuntimeError):
+            tr.run({"x": jnp.zeros(())}, 3)
+    finally:
+        loader.close()
+
+
+# ---------------------------------------------------------------------------
+# elastic resharding
+# ---------------------------------------------------------------------------
+
+def test_elastic_reshard_to_smaller_mesh():
+    from repro.models import init_params
+    params, axes = init_params(CFG, jax.random.PRNGKey(0))
+    mesh = degraded_mesh(jax.devices()[:1], model=1)
+    out, rules = reshard_state(params, axes, mesh)
+    for x, y in zip(jax.tree.leaves(params), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# optimizer + compression
+# ---------------------------------------------------------------------------
+
+def test_lr_schedule_shape():
+    cfg = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+    assert float(lr_schedule(cfg, jnp.int32(0))) == 0.0
+    assert abs(float(lr_schedule(cfg, jnp.int32(10))) - 1e-3) < 1e-9
+    assert float(lr_schedule(cfg, jnp.int32(100))) <= 1e-3 * 0.11
+
+
+def test_adamw_decreases_quadratic():
+    params = {"w": jnp.array([3.0, -2.0])}
+    opt = init_opt_state(params)
+    cfg = AdamWConfig(lr=5e-2, warmup_steps=0, weight_decay=0.0)
+    for _ in range(200):
+        g = {"w": 2 * params["w"]}
+        params, opt, _ = adamw_update(cfg, params, g, opt)
+    assert float(jnp.abs(params["w"]).max()) < 0.2
+
+
+def test_grad_clip():
+    params = {"w": jnp.zeros((3,))}
+    opt = init_opt_state(params)
+    cfg = AdamWConfig(lr=1e-2, grad_clip=1.0, warmup_steps=0)
+    g = {"w": jnp.full((3,), 1e6)}
+    p2, opt, m = adamw_update(cfg, params, g, opt)
+    assert float(m["grad_norm"]) > 1e5
+    assert np.isfinite(np.asarray(p2["w"])).all()
+
+
+def test_compression_error_feedback_converges():
+    """EF quantization: accumulated error stays bounded and the mean
+    compressed gradient tracks the true gradient."""
+    cfg = CompressionConfig(enabled=True, bits=8)
+    g = {"w": jnp.array([1e-3, 2e-3, -5e-1, 1.0])}
+    err = None
+    acc = jnp.zeros(4)
+    for _ in range(64):
+        cg, err, _ = compress_gradients(g, err, cfg)
+        acc = acc + cg["w"]
+    mean = np.asarray(acc) / 64
+    np.testing.assert_allclose(mean, np.asarray(g["w"]), rtol=5e-2, atol=1e-4)
+    assert float(global_norm(err)) < float(global_norm(g))
+
+
+def test_compression_quantizes():
+    cfg = CompressionConfig(enabled=True, bits=8, ef=False)
+    g = {"w": jnp.linspace(-1, 1, 1000)}
+    cg, _, _ = compress_gradients(g, None, cfg)
+    # at most 255 distinct levels
+    assert len(np.unique(np.asarray(cg["w"]))) <= 256
