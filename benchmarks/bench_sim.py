@@ -1,0 +1,121 @@
+"""BENCH_sim.json emitter: perf tracking for the paper-figure sweep.
+
+Times the canonical sweep subset (`benchmarks.sweep_subset`) through the
+orchestrator fast path (compile cache + event-heap engine + process pool)
+and records simulated-instructions/sec plus sweep wall-clock, compared
+against the committed pre-change baseline
+(``experiments/paper/BENCH_baseline.json``).  The timing run always
+*computes* (the on-disk sim cache is bypassed) so successive runs stay
+comparable; results are still written to the cache afterwards for the
+figure harness to reuse.
+
+Usage::
+
+    python -m benchmarks.bench_sim              # full tracked sweep
+    python -m benchmarks.bench_sim --smoke      # 2 workloads x 2 designs (CI)
+    python -m benchmarks.bench_sim --baseline   # re-measure the golden
+                                                # (seed) engine serially and
+                                                # rewrite the baseline file
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+from benchmarks.orchestrator import SimRunner, default_processes
+from benchmarks.sweep_subset import SWEEP_DESIGNS, sweep_jobs
+from repro.workloads import WORKLOADS
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+BASELINE_PATH = ROOT / "experiments" / "paper" / "BENCH_baseline.json"
+OUT_PATH = ROOT / "BENCH_sim.json"
+
+SMOKE_WORKLOADS = ("srad", "kmeans")
+SMOKE_DESIGNS = ("BL", "LTRF")
+
+
+def measure_fast_path(jobs, processes=None) -> dict:
+    runner = SimRunner(processes=processes, disk_cache=False)
+    t0 = time.time()
+    runner.prefill(jobs)
+    wall = time.time() - t0
+    total_instr = sum(runner.sim(*job).instructions for job in jobs)
+    # persist into the shared sim cache for the figure harness
+    cached = SimRunner(processes=processes)
+    for job, res in runner._memo.items():
+        cached._disk_store(job, res)
+    return {
+        "engine": "fast-path",
+        "processes": runner.processes,
+        "sims": len(jobs),
+        "unique_sims": len(set(jobs)),
+        "wall_s": round(wall, 2),
+        "sim_instructions": total_instr,
+        "sim_instr_per_s": round(total_instr / max(wall, 1e-9), 1),
+    }
+
+
+def measure_golden_serial(jobs) -> dict:
+    from repro.sim.golden import golden_simulate
+    t0 = time.time()
+    total_instr = 0
+    for name, cfg in jobs:
+        total_instr += golden_simulate(WORKLOADS[name], cfg).instructions
+    wall = time.time() - t0
+    return {
+        "engine": "seed-serial",
+        "sims": len(jobs),
+        "wall_s": round(wall, 2),
+        "sim_instructions": total_instr,
+        "sim_instr_per_s": round(total_instr / max(wall, 1e-9), 1),
+    }
+
+
+def run_bench(smoke: bool = False, processes: int | None = None,
+              out_path: pathlib.Path = OUT_PATH) -> dict:
+    if smoke:
+        jobs = sweep_jobs(workloads=SMOKE_WORKLOADS, designs=SMOKE_DESIGNS,
+                          table2_configs=(7,))
+    else:
+        jobs = sweep_jobs()
+    report = {
+        "sweep": ("smoke(2 workloads x 2 designs)" if smoke else
+                  "fig14_subset(tc6+tc7, 7 designs, 14 workloads, + baselines)"),
+    }
+    report.update(measure_fast_path(jobs, processes=processes))
+    if not smoke and BASELINE_PATH.exists():
+        base = json.loads(BASELINE_PATH.read_text())
+        report["baseline"] = base
+        report["speedup_vs_baseline"] = round(
+            base["wall_s"] / max(report["wall_s"], 1e-9), 2)
+        report["counters_match_baseline"] = (
+            base.get("sim_instructions") == report["sim_instructions"])
+        out_path.write_text(json.dumps(report, indent=1) + "\n")
+        print(f"# wrote {out_path}", file=sys.stderr)
+    return report
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny 2x2 sweep for CI")
+    ap.add_argument("--baseline", action="store_true",
+                    help="re-measure the golden engine serially and rewrite "
+                         "the committed baseline")
+    ap.add_argument("--procs", type=int, default=None)
+    args = ap.parse_args(argv)
+    if args.baseline:
+        report = measure_golden_serial(sweep_jobs())
+        BASELINE_PATH.parent.mkdir(parents=True, exist_ok=True)
+        BASELINE_PATH.write_text(json.dumps(report, indent=1) + "\n")
+        print(f"# wrote {BASELINE_PATH}", file=sys.stderr)
+    else:
+        report = run_bench(smoke=args.smoke, processes=args.procs)
+    print(json.dumps(report, indent=1))
+
+
+if __name__ == "__main__":
+    main()

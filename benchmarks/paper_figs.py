@@ -3,6 +3,11 @@
 One function per artifact; all results cached to experiments/paper/ as JSON
 (simulations are deterministic, so the cache is sound).  `python -m
 benchmarks.run` prints every table as CSV.
+
+Every figure enumerates its simulation grid up front and hands it to the
+sweep orchestrator (`benchmarks.orchestrator`): jobs are deduplicated
+against the in-process/on-disk caches and the misses run across a process
+pool, so the full artifact set costs one pass over the unique design points.
 """
 from __future__ import annotations
 
@@ -10,16 +15,21 @@ import json
 import math
 import pathlib
 
-from repro.core import (
-    form_register_intervals, prefetch_schedule, renumber_registers,
+from benchmarks.orchestrator import default_runner
+from repro.core.plan_cache import (
+    cached_intervals, cached_prefetch_ops, cached_renumber,
 )
 from repro.core.prefetch import code_size_overhead, conflict_distribution
 from repro.sim import (
-    baseline_config, design_config, max_tolerable_latency, simulate,
+    SimConfig, baseline_config, design_config, max_tolerable_latency,
 )
+from repro.sim.designs import BASE_RF_KB, TOLERANCE_MULTS
 from repro.workloads import WORKLOADS
 
 OUT = pathlib.Path(__file__).resolve().parent.parent / "experiments" / "paper"
+
+RUNNER = default_runner()
+_sim = RUNNER.sim
 
 gm = lambda xs: math.exp(sum(math.log(max(x, 1e-9)) for x in xs) / len(xs))
 
@@ -34,15 +44,45 @@ def _cached(name: str, fn):
     return out
 
 
+def _prefill(jobs) -> None:
+    RUNNER.prefill([(w if isinstance(w, str) else w.name, cfg)
+                    for w, cfg in jobs])
+
+
+def _prefill_tolerance(pairs, num_warps: int = 64, loss: float = 0.05) -> None:
+    """Warm the cache for `max_tolerable_latency` without over-simulating.
+
+    The metric walks latency multipliers in order and stops at the first
+    failing point, so simulating the full grid up front would waste work on
+    designs that die early.  Instead run one parallel *wave* per multiplier,
+    dropping (workload, design) pairs exactly when the sequential search
+    would — the cache ends up holding precisely the simulations the metric
+    then replays."""
+    def cfg_for(design, m):
+        return design_config(design, mrf_latency_mult=float(m),
+                             rf_size_kb=BASE_RF_KB, num_warps=num_warps)
+
+    _prefill([(n, cfg_for(d, 1.0)) for n, d in pairs])
+    alive = {(n, d): RUNNER.sim(n, cfg_for(d, 1.0)).ipc for n, d in pairs}
+    for m in TOLERANCE_MULTS[1:]:
+        if not alive:
+            break
+        _prefill([(n, cfg_for(d, m)) for n, d in alive])
+        alive = {(n, d): ref for (n, d), ref in alive.items()
+                 if RUNNER.sim(n, cfg_for(d, m)).ipc >= (1 - loss) * ref}
+
+
 # ---------------------------------------------------------------------------
 
 def fig04_hit_rates():
     """Fig 4: HW (RFC) and SW (SHRF) register-cache hit rates."""
     def run():
+        _prefill([(n, design_config(d, table2_config=7))
+                  for n in WORKLOADS for d in ("RFC", "SHRF")])
         rows = []
         for name, w in WORKLOADS.items():
-            rfc = simulate(w, design_config("RFC", table2_config=7))
-            shrf = simulate(w, design_config("SHRF", table2_config=7))
+            rfc = _sim(w, design_config("RFC", table2_config=7))
+            shrf = _sim(w, design_config("SHRF", table2_config=7))
             rows.append({"workload": name, "rfc_hit": rfc.hit_rate,
                          "shrf_guaranteed_hit": shrf.hit_rate,
                          "shrf_prefetch_per_instr":
@@ -53,15 +93,20 @@ def fig04_hit_rates():
 
 def fig14_ipc():
     """Fig 14: normalized IPC of all designs at Table-2 configs #6/#7."""
+    DESIGNS = ("BL", "RFC", "SHRF", "LTRF", "LTRF_conf", "Ideal")
+
     def run():
+        _prefill([(n, baseline_config()) for n in WORKLOADS]
+                 + [(n, design_config(d, table2_config=tc))
+                    for tc in (6, 7) for n in WORKLOADS for d in DESIGNS])
         rows = []
         for tc in (6, 7):
             for name, w in WORKLOADS.items():
-                base = simulate(w, baseline_config()).ipc
+                base = _sim(w, baseline_config()).ipc
                 row = {"config": tc, "workload": name,
                        "register_sensitive": w.register_sensitive}
-                for d in ("BL", "RFC", "SHRF", "LTRF", "LTRF_conf", "Ideal"):
-                    row[d] = simulate(w, design_config(d, table2_config=tc)).ipc / base
+                for d in DESIGNS:
+                    row[d] = _sim(w, design_config(d, table2_config=tc)).ipc / base
                 rows.append(row)
         return rows
     return _cached("fig14_ipc", run)
@@ -69,12 +114,15 @@ def fig14_ipc():
 
 def fig15_tolerable_latency():
     """Fig 15: max MRF latency with <=5% IPC loss, per design."""
+    DESIGNS = ("BL", "RFC", "SHRF", "LTRF", "LTRF_conf")
+
     def run():
+        _prefill_tolerance([(n, d) for n in WORKLOADS for d in DESIGNS])
         rows = []
         for name, w in WORKLOADS.items():
             row = {"workload": name}
-            for d in ("BL", "RFC", "SHRF", "LTRF", "LTRF_conf"):
-                row[d] = max_tolerable_latency(w, d)
+            for d in DESIGNS:
+                row[d] = max_tolerable_latency(w, d, sim=_sim)
             rows.append(row)
         return rows
     return _cached("fig15_tolerable", run)
@@ -86,10 +134,10 @@ def fig16_conflicts():
         rows = []
         for cap in (8, 16, 32):
             for name, w in WORKLOADS.items():
-                an = form_register_intervals(w.program, n_cap=cap)
-                pre = prefetch_schedule(an, num_banks=16)
-                rr = renumber_registers(an, num_banks=16)
-                post = prefetch_schedule(rr.analysis, num_banks=16)
+                an = cached_intervals(w.program, cap)
+                pre = list(cached_prefetch_ops(an, num_banks=16).values())
+                rr = cached_renumber(w.program, cap, num_banks=16)
+                post = list(cached_prefetch_ops(rr.analysis, num_banks=16).values())
                 rows.append({
                     "cap": cap, "workload": name,
                     "ltrf_dist": conflict_distribution(pre),
@@ -104,18 +152,21 @@ def fig16_conflicts():
 def fig17_cap_sensitivity():
     """Fig 17: IPC vs interval register cap at several MRF latencies."""
     def run():
+        grid = [(cap, mult, d) for cap in (8, 16, 32)
+                for mult in (2.0, 4.0, 6.3) for d in ("LTRF", "LTRF_conf")]
+        _prefill([(n, baseline_config()) for n in WORKLOADS]
+                 + [(n, design_config(d, mrf_latency_mult=mult, interval_cap=cap))
+                    for cap, mult, d in grid for n in WORKLOADS])
         rows = []
-        for cap in (8, 16, 32):
-            for mult in (2.0, 4.0, 6.3):
-                for d in ("LTRF", "LTRF_conf"):
-                    vals = []
-                    for w in WORKLOADS.values():
-                        base = simulate(w, baseline_config()).ipc
-                        r = simulate(w, design_config(
-                            d, mrf_latency_mult=mult, interval_cap=cap))
-                        vals.append(r.ipc / base)
-                    rows.append({"cap": cap, "mult": mult, "design": d,
-                                 "geomean_ipc": gm(vals)})
+        for cap, mult, d in grid:
+            vals = []
+            for w in WORKLOADS.values():
+                base = _sim(w, baseline_config()).ipc
+                r = _sim(w, design_config(
+                    d, mrf_latency_mult=mult, interval_cap=cap))
+                vals.append(r.ipc / base)
+            rows.append({"cap": cap, "mult": mult, "design": d,
+                         "geomean_ipc": gm(vals)})
         return rows
     return _cached("fig17_cap", run)
 
@@ -123,17 +174,20 @@ def fig17_cap_sensitivity():
 def fig18_active_warps():
     """Fig 18: IPC vs number of active warps."""
     def run():
+        grid = [(slots, d) for slots in (4, 8, 16) for d in ("LTRF", "LTRF_conf")]
+        _prefill([(n, baseline_config()) for n in WORKLOADS]
+                 + [(n, design_config(d, table2_config=7, active_slots=slots))
+                    for slots, d in grid for n in WORKLOADS])
         rows = []
-        for slots in (4, 8, 16):
-            for d in ("LTRF", "LTRF_conf"):
-                vals = []
-                for w in WORKLOADS.values():
-                    base = simulate(w, baseline_config()).ipc
-                    r = simulate(w, design_config(d, table2_config=7,
-                                                  active_slots=slots))
-                    vals.append(r.ipc / base)
-                rows.append({"active_slots": slots, "design": d,
-                             "geomean_ipc": gm(vals)})
+        for slots, d in grid:
+            vals = []
+            for w in WORKLOADS.values():
+                base = _sim(w, baseline_config()).ipc
+                r = _sim(w, design_config(d, table2_config=7,
+                                          active_slots=slots))
+                vals.append(r.ipc / base)
+            rows.append({"active_slots": slots, "design": d,
+                         "geomean_ipc": gm(vals)})
         return rows
     return _cached("fig18_warps", run)
 
@@ -141,16 +195,20 @@ def fig18_active_warps():
 def fig19_strands():
     """Fig 19: strand-bounded (SHRF-style) vs register-interval prefetch."""
     def run():
+        grid = [(mult, d) for mult in (1.0, 2.0, 3.0, 5.3, 6.3)
+                for d in ("BL", "RFC", "SHRF", "LTRF", "LTRF_conf")]
+        _prefill([(n, baseline_config()) for n in WORKLOADS]
+                 + [(n, design_config(d, mrf_latency_mult=mult, rf_size_kb=256))
+                    for mult, d in grid for n in WORKLOADS])
         rows = []
-        for mult in (1.0, 2.0, 3.0, 5.3, 6.3):
-            for d in ("BL", "RFC", "SHRF", "LTRF", "LTRF_conf"):
-                vals = []
-                for w in WORKLOADS.values():
-                    base = simulate(w, baseline_config()).ipc
-                    r = simulate(w, design_config(d, mrf_latency_mult=mult,
-                                                  rf_size_kb=256))
-                    vals.append(r.ipc / base)
-                rows.append({"mult": mult, "design": d, "geomean_ipc": gm(vals)})
+        for mult, d in grid:
+            vals = []
+            for w in WORKLOADS.values():
+                base = _sim(w, baseline_config()).ipc
+                r = _sim(w, design_config(d, mrf_latency_mult=mult,
+                                          rf_size_kb=256))
+                vals.append(r.ipc / base)
+            rows.append({"mult": mult, "design": d, "geomean_ipc": gm(vals)})
         return rows
     return _cached("fig19_strands", run)
 
@@ -158,10 +216,13 @@ def fig19_strands():
 def fig20_warps_per_sm():
     """Fig 20: latency tolerance vs total warps per SM."""
     def run():
+        for n in (16, 32, 64, 128):
+            _prefill_tolerance([(name, d) for name in WORKLOADS
+                                for d in ("BL", "LTRF")], num_warps=n)
         rows = []
         for n in (16, 32, 64, 128):
             for d in ("BL", "LTRF"):
-                tols = [max_tolerable_latency(w, d, num_warps=n)
+                tols = [max_tolerable_latency(w, d, num_warps=n, sim=_sim)
                         for w in WORKLOADS.values()]
                 rows.append({"warps": n, "design": d,
                              "avg_tolerable": sum(tols) / len(tols)})
@@ -172,10 +233,11 @@ def fig20_warps_per_sm():
 def table4_interval_length():
     """Table 4: real vs optimal register-interval length (dyn instructions)."""
     def run():
-        from repro.sim.engine import SimConfig, Simulator
+        cfg = SimConfig(design="LTRF", interval_cap=16)
+        _prefill([(n, cfg) for n in WORKLOADS])
         rows = []
         for name, w in WORKLOADS.items():
-            r = Simulator(SimConfig(design="LTRF", interval_cap=16), w).run()
+            r = _sim(w, cfg)
             real_len = r.instructions / max(r.prefetch_ops, 1)
             # optimal: consecutive dynamic instructions touching <= cap regs,
             # measured on the dynamic trace of one warp
@@ -190,9 +252,7 @@ def table4_interval_length():
 def _optimal_interval_length(w, cap: int) -> float:
     """Greedy best-case: walk one warp's dynamic trace, cutting only when the
     running register set exceeds the cap."""
-    from repro.sim.engine import SimConfig, Simulator
-    sim = Simulator(SimConfig(design="BL"), w)
-    prog = sim.prog
+    prog = w.program  # the BL pipeline runs the program unmodified
     # deterministic single-warp trace
     label, idx = prog.entry, 0
     counters: dict[str, int] = {}
@@ -252,7 +312,7 @@ def table_code_size():
     def run():
         rows = []
         for name, w in WORKLOADS.items():
-            an = form_register_intervals(w.program, n_cap=16)
+            an = cached_intervals(w.program, 16)
             rows.append({
                 "workload": name,
                 "bitvec_only": code_size_overhead(an),
@@ -265,11 +325,13 @@ def table_code_size():
 def table_mrf_traffic():
     """§5.2/§5.3 power proxy: MRF access reduction, LTRF vs BL."""
     def run():
+        _prefill([(n, design_config(d, table2_config=7))
+                  for n in WORKLOADS for d in ("BL", "LTRF", "LTRF_plus")])
         rows = []
         for name, w in WORKLOADS.items():
-            bl = simulate(w, design_config("BL", table2_config=7))
-            lt = simulate(w, design_config("LTRF", table2_config=7))
-            lp = simulate(w, design_config("LTRF_plus", table2_config=7))
+            bl = _sim(w, design_config("BL", table2_config=7))
+            lt = _sim(w, design_config("LTRF", table2_config=7))
+            lp = _sim(w, design_config("LTRF_plus", table2_config=7))
             rows.append({"workload": name,
                          "bl_mrf": bl.mrf_accesses,
                          "ltrf_mrf": lt.mrf_accesses,
@@ -284,7 +346,12 @@ def table_power():
     """§5.3/§1 power claims: same-tech -23%, DWM-8x -46%."""
     def run():
         from repro.sim.power import power_comparison
-        return [power_comparison(w) for w in WORKLOADS.values()]
+        _prefill([(n, cfg) for n in WORKLOADS
+                  for cfg in (baseline_config(),
+                              design_config("LTRF", table2_config=7),
+                              design_config("LTRF", mrf_latency_mult=1.0,
+                                            rf_size_kb=256))])
+        return [power_comparison(w, sim=_sim) for w in WORKLOADS.values()]
     return _cached("table_power", run)
 
 

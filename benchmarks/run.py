@@ -39,6 +39,14 @@ def bench_paper_figures() -> None:
         print(f"# {name}: {time.time() - t0:.1f}s", file=sys.stderr)
 
 
+def bench_sim_sweep() -> None:
+    """Time the tracked paper-figure sweep subset and refresh BENCH_sim.json
+    (see benchmarks.bench_sim; pass REPRO_SIM_PROCS to bound the pool)."""
+    from benchmarks.bench_sim import run_bench
+    report = run_bench(smoke="--smoke" in sys.argv)
+    _emit("sim", {k: v for k, v in report.items() if not isinstance(v, dict)})
+
+
 def bench_kernels() -> None:
     """Interpret-mode micro-bench: wall time is NOT TPU perf — this verifies
     the kernels execute and reports call latencies for regression tracking."""
@@ -123,6 +131,7 @@ def main() -> None:
     only = sys.argv[1] if len(sys.argv) > 1 else None
     benches = {
         "paper": bench_paper_figures,
+        "sim": bench_sim_sweep,
         "kernels": bench_kernels,
         "dryrun": bench_dryrun_summary,
         "roofline": bench_roofline_summary,

@@ -23,8 +23,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 from .coloring import chaitin_color
-from .intervals import form_register_intervals
 from .ir import parse_asm
+from .plan_cache import cached_intervals
 
 
 @dataclass(frozen=True)
@@ -73,16 +73,46 @@ class IntervalPlan:
             # granule-accurate fetch bytes never exceed the budget (a single
             # granule bigger than the budget is impossible by construction)
             assert p.bytes <= self.vmem_budget + self.tile_bytes
-            used = {}
+            # Slot reuse within one fetch round is bounded: co-fetched tiles
+            # form a clique, so balanced coloring hands each slot at most
+            # ceil(tiles / num_slots) of them.  A slot reused beyond that
+            # bound would serialize the DMA stream behind a single buffer.
+            used: dict[int, list[str]] = {}
             for t in p.tiles:
-                s = p.slots[t.name]
-                assert s not in used or True  # slots may repeat across rounds
+                used.setdefault(p.slots[t.name], []).append(t.name)
+            bound = -(-len(p.tiles) // max(self.num_slots, 1))
+            for s, names in used.items():
+                assert len(names) <= bound, (
+                    f"slot {s} reused {len(names)}x in interval "
+                    f"{p.interval_id} (bound {bound}): {names}")
         # conflict-free within a fetch round: tiles fetched together should
         # map to distinct slots whenever enough slots exist
         for p in self.prefetches:
             if len(p.tiles) <= self.num_slots:
                 vals = [p.slots[t.name] for t in p.tiles]
                 assert len(set(vals)) == len(vals), "slot conflict"
+
+
+def _balanced_slots(names: list[str], idx: dict[str, int],
+                    colors: dict[int, int], num_slots: int) -> dict[str, int]:
+    """Per-round buffer-slot assignment derived from the global coloring.
+
+    The ICG coloring is a preference, not a guarantee: a tile constrained by
+    *other* intervals' cliques can land on a slot already taken in this round.
+    Rebalance within the round so no slot serves more than
+    ceil(tiles/num_slots) tiles — the bound `IntervalPlan.validate` enforces —
+    while keeping the colored slot whenever it is still under that bound.
+    """
+    bound = -(-len(names) // max(num_slots, 1))
+    usage = [0] * max(num_slots, 1)
+    out: dict[str, int] = {}
+    for n in names:
+        s = colors[idx[n]] % num_slots
+        if usage[s] >= bound:
+            s = min(range(num_slots), key=lambda c: (usage[c], c))
+        out[n] = s
+        usage[s] += 1
+    return out
 
 
 def plan_layer_stream(
@@ -118,7 +148,8 @@ def plan_layer_stream(
                 lines.append(f"add r{r}, r{r}, r{r}")
     lines.append("exit")
     prog = parse_asm("\n".join(lines), name="layer-stream")
-    analysis = form_register_intervals(prog, n_cap=cap)
+    # memoized: repeated plans over the same layer graph compile once
+    analysis = cached_intervals(prog, cap)
 
     # Map intervals back to layers + tiles.
     reg_to_tile = {}
@@ -163,7 +194,7 @@ def plan_layer_stream(
             interval_id=iv.iid,
             layer_names=lnames,
             tiles=[tile_by_name[n] for n in names],
-            slots={n: coloring.colors[idx[n]] % num_slots for n in names},
+            slots=_balanced_slots(names, idx, coloring.colors, num_slots),
             fetch_bytes=n_granules * granule,
         ))
     plan = IntervalPlan(prefetches=prefetches, vmem_budget=vmem_budget,

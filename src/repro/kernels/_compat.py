@@ -1,0 +1,15 @@
+"""Version compatibility helpers shared by the Pallas TPU kernels."""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def tpu_compiler_params(**kwargs):
+    """Build Mosaic compiler params across jax versions.
+
+    The class was renamed ``TPUCompilerParams`` -> ``CompilerParams`` in newer
+    jax releases; accept either so the kernels run on the full supported range.
+    """
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams")
+    return cls(**kwargs)

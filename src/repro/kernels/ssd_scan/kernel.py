@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import tpu_compiler_params
+
 
 def _ssd_chunk_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
                       y_ref, state_ref, indecay_ref, chunkdecay_ref):
@@ -95,7 +97,7 @@ def ssd_chunk_kernel(x, dt, A, Bm, Cm, *, chunk: int, interpret: bool = False):
             jax.ShapeDtypeStruct((Bsz, nc, H, Q), jnp.float32),
             jax.ShapeDtypeStruct((Bsz, nc, H, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary", "parallel"),
         ),
         interpret=interpret,

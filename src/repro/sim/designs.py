@@ -30,6 +30,11 @@ TABLE2 = {
 
 BASE_RF_KB = 256
 
+# The latency-multiplier grid `max_tolerable_latency` walks; callers that
+# pre-simulate the grid (benchmarks.paper_figs) import this so the two can
+# never drift apart.
+TOLERANCE_MULTS = (1, 2, 3, 4, 5, 6, 7, 8, 10, 12, 16)
+
 
 def design_config(
     design: str,
@@ -76,21 +81,25 @@ def max_tolerable_latency(
     workload: Workload,
     design: str,
     loss: float = 0.05,
-    mults: tuple[float, ...] = (1, 2, 3, 4, 5, 6, 7, 8, 10, 12, 16),
+    mults: tuple[float, ...] = TOLERANCE_MULTS,
     num_warps: int = 64,
+    sim=simulate,
 ) -> float:
     """§7.2 metric: largest MRF latency multiplier with <= ``loss`` IPC drop
-    relative to the same design at 1x (main RF size held constant)."""
-    ref = simulate(workload, design_config(design, mrf_latency_mult=1.0,
-                                           rf_size_kb=BASE_RF_KB,
-                                           num_warps=num_warps)).ipc
+    relative to the same design at 1x (main RF size held constant).
+
+    ``sim`` lets callers swap in a memoizing runner (benchmarks.orchestrator)
+    without changing the metric."""
+    ref = sim(workload, design_config(design, mrf_latency_mult=1.0,
+                                      rf_size_kb=BASE_RF_KB,
+                                      num_warps=num_warps)).ipc
     best = 1.0
     for m in mults:
         if m == 1:
             continue
-        ipc = simulate(workload, design_config(design, mrf_latency_mult=float(m),
-                                               rf_size_kb=BASE_RF_KB,
-                                               num_warps=num_warps)).ipc
+        ipc = sim(workload, design_config(design, mrf_latency_mult=float(m),
+                                          rf_size_kb=BASE_RF_KB,
+                                          num_warps=num_warps)).ipc
         if ipc >= (1 - loss) * ref:
             best = float(m)
         else:

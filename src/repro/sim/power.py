@@ -56,16 +56,21 @@ def rf_power(res: SimResult, tech: str = "hp-sram", cap_mult: int = 1,
                        dynamic=dyn / cycles, static=static)
 
 
-def power_comparison(workload, table2_config: int = 7):
-    """BL (HP-SRAM 1x) vs LTRF on the Table-2 design point's technology."""
+def power_comparison(workload, table2_config: int = 7, sim=None):
+    """BL (HP-SRAM 1x) vs LTRF on the Table-2 design point's technology.
+
+    ``sim`` lets callers swap in a memoizing runner (benchmarks.orchestrator).
+    """
     from .designs import baseline_config, design_config
     from .engine import simulate
 
+    if sim is None:
+        sim = simulate
     tech = {6: "tfet", 7: "dwm"}[table2_config]
-    bl = simulate(workload, baseline_config())
-    lt = simulate(workload, design_config("LTRF", table2_config=table2_config))
-    lt_same = simulate(workload, design_config("LTRF", mrf_latency_mult=1.0,
-                                               rf_size_kb=256))
+    bl = sim(workload, baseline_config())
+    lt = sim(workload, design_config("LTRF", table2_config=table2_config))
+    lt_same = sim(workload, design_config("LTRF", mrf_latency_mult=1.0,
+                                          rf_size_kb=256))
     p_bl = rf_power(bl, "hp-sram", cap_mult=1)
     p_lt = rf_power(lt, tech, cap_mult=8)
     p_lt_same = rf_power(lt_same, "hp-sram", cap_mult=1)
