@@ -7,12 +7,16 @@ against the committed pre-change baseline
 (``experiments/paper/BENCH_baseline.json``).  The timing run always
 *computes* (the on-disk sim cache is bypassed) so successive runs stay
 comparable; results are still written to the cache afterwards for the
-figure harness to reuse.
+figure harness to reuse, and a replay pass through the disk cache records
+SimRunner hit/miss counters in the report — a cache-layer regression shows
+up as ``replay_all_hits: false`` in the artifact.
 
 Usage::
 
     python -m benchmarks.bench_sim              # full tracked sweep
     python -m benchmarks.bench_sim --smoke      # 2 workloads x 2 designs (CI)
+    python -m benchmarks.bench_sim --suite traced   # sweep the lifted
+                                                # real kernels (untracked)
     python -m benchmarks.bench_sim --baseline   # re-measure the golden
                                                 # (seed) engine serially and
                                                 # rewrite the baseline file
@@ -27,7 +31,7 @@ import time
 
 from benchmarks.orchestrator import SimRunner, default_processes
 from benchmarks.sweep_subset import SWEEP_DESIGNS, sweep_jobs
-from repro.workloads import WORKLOADS
+from repro.workloads import get_workload
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 BASELINE_PATH = ROOT / "experiments" / "paper" / "BENCH_baseline.json"
@@ -43,10 +47,18 @@ def measure_fast_path(jobs, processes=None) -> dict:
     runner.prefill(jobs)
     wall = time.time() - t0
     total_instr = sum(runner.sim(*job).instructions for job in jobs)
-    # persist into the shared sim cache for the figure harness
-    cached = SimRunner(processes=processes)
+    # persist into the shared sim cache for the figure harness, then replay
+    # through the cache layers: every job must come back as a memo/disk hit —
+    # computed > 0 here means the cache key or a layer broke
+    replay = SimRunner(processes=1)
     for job, res in runner._memo.items():
-        cached._disk_store(job, res)
+        replay._disk_store(job, res)
+    replay.prefill(jobs)
+    stats = {
+        "timing_run": dict(runner.stats),
+        "replay": dict(replay.stats),
+        "replay_all_hits": replay.stats["computed"] == 0,
+    }
     return {
         "engine": "fast-path",
         "processes": runner.processes,
@@ -55,6 +67,7 @@ def measure_fast_path(jobs, processes=None) -> dict:
         "wall_s": round(wall, 2),
         "sim_instructions": total_instr,
         "sim_instr_per_s": round(total_instr / max(wall, 1e-9), 1),
+        "sim_cache": stats,
     }
 
 
@@ -63,7 +76,7 @@ def measure_golden_serial(jobs) -> dict:
     t0 = time.time()
     total_instr = 0
     for name, cfg in jobs:
-        total_instr += golden_simulate(WORKLOADS[name], cfg).instructions
+        total_instr += golden_simulate(get_workload(name), cfg).instructions
     wall = time.time() - t0
     return {
         "engine": "seed-serial",
@@ -75,18 +88,26 @@ def measure_golden_serial(jobs) -> dict:
 
 
 def run_bench(smoke: bool = False, processes: int | None = None,
-              out_path: pathlib.Path = OUT_PATH) -> dict:
+              out_path: pathlib.Path = OUT_PATH,
+              suite: str | None = None) -> dict:
     if smoke:
         jobs = sweep_jobs(workloads=SMOKE_WORKLOADS, designs=SMOKE_DESIGNS,
                           table2_configs=(7,))
-    else:
+        label = "smoke(2 workloads x 2 designs)"
+    elif suite in (None, "synth"):
         jobs = sweep_jobs()
-    report = {
-        "sweep": ("smoke(2 workloads x 2 designs)" if smoke else
-                  "fig14_subset(tc6+tc7, 7 designs, 14 workloads, + baselines)"),
-    }
+        label = "fig14_subset(tc6+tc7, 7 designs, 14 workloads, + baselines)"
+    else:
+        jobs = sweep_jobs(suite=suite)
+        label = f"fig14_subset(tc6+tc7, 7 designs, suite={suite}, + baselines)"
+    report = {"sweep": label}
     report.update(measure_fast_path(jobs, processes=processes))
-    if not smoke and BASELINE_PATH.exists():
+    cache = report["sim_cache"]
+    print(f"# sim cache: timing_run={cache['timing_run']} "
+          f"replay={cache['replay']} all_hits={cache['replay_all_hits']}",
+          file=sys.stderr)
+    tracked = not smoke and suite in (None, "synth")
+    if tracked and BASELINE_PATH.exists():
         base = json.loads(BASELINE_PATH.read_text())
         report["baseline"] = base
         report["speedup_vs_baseline"] = round(
@@ -102,6 +123,11 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny 2x2 sweep for CI")
+    ap.add_argument("--suite", default=None,
+                    choices=("synth", "traced", "all"),
+                    help="workload suite to sweep (default: the tracked "
+                         "synthetic suite; traced/all runs are not compared "
+                         "against the baseline)")
     ap.add_argument("--baseline", action="store_true",
                     help="re-measure the golden engine serially and rewrite "
                          "the committed baseline")
@@ -113,7 +139,8 @@ def main(argv=None) -> None:
         BASELINE_PATH.write_text(json.dumps(report, indent=1) + "\n")
         print(f"# wrote {BASELINE_PATH}", file=sys.stderr)
     else:
-        report = run_bench(smoke=args.smoke, processes=args.procs)
+        report = run_bench(smoke=args.smoke, processes=args.procs,
+                           suite=args.suite)
     print(json.dumps(report, indent=1))
 
 

@@ -24,7 +24,7 @@ from dataclasses import asdict
 
 from repro.sim import SimConfig, SimResult, simulate
 from repro.sim.engine import ENGINE_REV
-from repro.workloads import WORKLOADS
+from repro.workloads import get_workload
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 SIMCACHE = ROOT / "experiments" / "paper" / "simcache"
@@ -44,7 +44,8 @@ def sim_key(workload: str, cfg: SimConfig) -> str:
 
 def _run_job(job: Job) -> tuple[str, SimConfig, dict]:
     name, cfg = job
-    res = simulate(WORKLOADS[name], cfg)
+    # get_workload resolves lazy suites (e.g. traced kernels) in pool workers
+    res = simulate(get_workload(name), cfg)
     return name, cfg, asdict(res)
 
 
@@ -110,7 +111,7 @@ class SimRunner:
         res = self._lookup(job)
         if res is None:
             self.stats["computed"] += 1
-            res = simulate(WORKLOADS[name], cfg)
+            res = simulate(get_workload(name), cfg)
             self._memo[job] = res
             self._disk_store(job, res)
         return res

@@ -24,17 +24,34 @@ from repro.sim import (
     SimConfig, baseline_config, design_config, max_tolerable_latency,
 )
 from repro.sim.designs import BASE_RF_KB, TOLERANCE_MULTS
-from repro.workloads import WORKLOADS
+from repro.workloads import get_workload, workload_names
 
 OUT = pathlib.Path(__file__).resolve().parent.parent / "experiments" / "paper"
 
 RUNNER = default_runner()
 _sim = RUNNER.sim
 
+# Suite selector: None = the synthetic default; "traced" runs every figure
+# over the lifted real kernels (artifacts gain a _traced suffix so the two
+# result sets never mix).  Set via `python -m benchmarks.run --suite traced`.
+_SUITE: str | None = None
+
+
+def set_suite(suite: str | None) -> None:
+    global _SUITE
+    _SUITE = suite
+
+
+def _workloads():
+    return {n: get_workload(n) for n in workload_names(_SUITE)}
+
+
 gm = lambda xs: math.exp(sum(math.log(max(x, 1e-9)) for x in xs) / len(xs))
 
 
 def _cached(name: str, fn):
+    if _SUITE:
+        name = f"{name}_{_SUITE}"
     OUT.mkdir(parents=True, exist_ok=True)
     p = OUT / f"{name}.json"
     if p.exists():
@@ -77,10 +94,11 @@ def _prefill_tolerance(pairs, num_warps: int = 64, loss: float = 0.05) -> None:
 def fig04_hit_rates():
     """Fig 4: HW (RFC) and SW (SHRF) register-cache hit rates."""
     def run():
+        WL = _workloads()
         _prefill([(n, design_config(d, table2_config=7))
-                  for n in WORKLOADS for d in ("RFC", "SHRF")])
+                  for n in WL for d in ("RFC", "SHRF")])
         rows = []
-        for name, w in WORKLOADS.items():
+        for name, w in WL.items():
             rfc = _sim(w, design_config("RFC", table2_config=7))
             shrf = _sim(w, design_config("SHRF", table2_config=7))
             rows.append({"workload": name, "rfc_hit": rfc.hit_rate,
@@ -96,12 +114,13 @@ def fig14_ipc():
     DESIGNS = ("BL", "RFC", "SHRF", "LTRF", "LTRF_conf", "Ideal")
 
     def run():
-        _prefill([(n, baseline_config()) for n in WORKLOADS]
+        WL = _workloads()
+        _prefill([(n, baseline_config()) for n in WL]
                  + [(n, design_config(d, table2_config=tc))
-                    for tc in (6, 7) for n in WORKLOADS for d in DESIGNS])
+                    for tc in (6, 7) for n in WL for d in DESIGNS])
         rows = []
         for tc in (6, 7):
-            for name, w in WORKLOADS.items():
+            for name, w in WL.items():
                 base = _sim(w, baseline_config()).ipc
                 row = {"config": tc, "workload": name,
                        "register_sensitive": w.register_sensitive}
@@ -117,9 +136,10 @@ def fig15_tolerable_latency():
     DESIGNS = ("BL", "RFC", "SHRF", "LTRF", "LTRF_conf")
 
     def run():
-        _prefill_tolerance([(n, d) for n in WORKLOADS for d in DESIGNS])
+        WL = _workloads()
+        _prefill_tolerance([(n, d) for n in WL for d in DESIGNS])
         rows = []
-        for name, w in WORKLOADS.items():
+        for name, w in WL.items():
             row = {"workload": name}
             for d in DESIGNS:
                 row[d] = max_tolerable_latency(w, d, sim=_sim)
@@ -131,9 +151,10 @@ def fig15_tolerable_latency():
 def fig16_conflicts():
     """Fig 6/16: bank-conflict distribution, LTRF vs LTRF_conf, caps 8/16/32."""
     def run():
+        WL = _workloads()
         rows = []
         for cap in (8, 16, 32):
-            for name, w in WORKLOADS.items():
+            for name, w in WL.items():
                 an = cached_intervals(w.program, cap)
                 pre = list(cached_prefetch_ops(an, num_banks=16).values())
                 rr = cached_renumber(w.program, cap, num_banks=16)
@@ -152,15 +173,16 @@ def fig16_conflicts():
 def fig17_cap_sensitivity():
     """Fig 17: IPC vs interval register cap at several MRF latencies."""
     def run():
+        WL = _workloads()
         grid = [(cap, mult, d) for cap in (8, 16, 32)
                 for mult in (2.0, 4.0, 6.3) for d in ("LTRF", "LTRF_conf")]
-        _prefill([(n, baseline_config()) for n in WORKLOADS]
+        _prefill([(n, baseline_config()) for n in WL]
                  + [(n, design_config(d, mrf_latency_mult=mult, interval_cap=cap))
-                    for cap, mult, d in grid for n in WORKLOADS])
+                    for cap, mult, d in grid for n in WL])
         rows = []
         for cap, mult, d in grid:
             vals = []
-            for w in WORKLOADS.values():
+            for w in WL.values():
                 base = _sim(w, baseline_config()).ipc
                 r = _sim(w, design_config(
                     d, mrf_latency_mult=mult, interval_cap=cap))
@@ -174,14 +196,15 @@ def fig17_cap_sensitivity():
 def fig18_active_warps():
     """Fig 18: IPC vs number of active warps."""
     def run():
+        WL = _workloads()
         grid = [(slots, d) for slots in (4, 8, 16) for d in ("LTRF", "LTRF_conf")]
-        _prefill([(n, baseline_config()) for n in WORKLOADS]
+        _prefill([(n, baseline_config()) for n in WL]
                  + [(n, design_config(d, table2_config=7, active_slots=slots))
-                    for slots, d in grid for n in WORKLOADS])
+                    for slots, d in grid for n in WL])
         rows = []
         for slots, d in grid:
             vals = []
-            for w in WORKLOADS.values():
+            for w in WL.values():
                 base = _sim(w, baseline_config()).ipc
                 r = _sim(w, design_config(d, table2_config=7,
                                           active_slots=slots))
@@ -195,15 +218,16 @@ def fig18_active_warps():
 def fig19_strands():
     """Fig 19: strand-bounded (SHRF-style) vs register-interval prefetch."""
     def run():
+        WL = _workloads()
         grid = [(mult, d) for mult in (1.0, 2.0, 3.0, 5.3, 6.3)
                 for d in ("BL", "RFC", "SHRF", "LTRF", "LTRF_conf")]
-        _prefill([(n, baseline_config()) for n in WORKLOADS]
+        _prefill([(n, baseline_config()) for n in WL]
                  + [(n, design_config(d, mrf_latency_mult=mult, rf_size_kb=256))
-                    for mult, d in grid for n in WORKLOADS])
+                    for mult, d in grid for n in WL])
         rows = []
         for mult, d in grid:
             vals = []
-            for w in WORKLOADS.values():
+            for w in WL.values():
                 base = _sim(w, baseline_config()).ipc
                 r = _sim(w, design_config(d, mrf_latency_mult=mult,
                                           rf_size_kb=256))
@@ -216,14 +240,15 @@ def fig19_strands():
 def fig20_warps_per_sm():
     """Fig 20: latency tolerance vs total warps per SM."""
     def run():
+        WL = _workloads()
         for n in (16, 32, 64, 128):
-            _prefill_tolerance([(name, d) for name in WORKLOADS
+            _prefill_tolerance([(name, d) for name in WL
                                 for d in ("BL", "LTRF")], num_warps=n)
         rows = []
         for n in (16, 32, 64, 128):
             for d in ("BL", "LTRF"):
                 tols = [max_tolerable_latency(w, d, num_warps=n, sim=_sim)
-                        for w in WORKLOADS.values()]
+                        for w in WL.values()]
                 rows.append({"warps": n, "design": d,
                              "avg_tolerable": sum(tols) / len(tols)})
         return rows
@@ -233,10 +258,11 @@ def fig20_warps_per_sm():
 def table4_interval_length():
     """Table 4: real vs optimal register-interval length (dyn instructions)."""
     def run():
+        WL = _workloads()
         cfg = SimConfig(design="LTRF", interval_cap=16)
-        _prefill([(n, cfg) for n in WORKLOADS])
+        _prefill([(n, cfg) for n in WL])
         rows = []
-        for name, w in WORKLOADS.items():
+        for name, w in WL.items():
             r = _sim(w, cfg)
             real_len = r.instructions / max(r.prefetch_ops, 1)
             # optimal: consecutive dynamic instructions touching <= cap regs,
@@ -310,8 +336,9 @@ def _optimal_interval_length(w, cap: int) -> float:
 def table_code_size():
     """§5.3: code-size overhead of prefetch bit-vectors."""
     def run():
+        WL = _workloads()
         rows = []
-        for name, w in WORKLOADS.items():
+        for name, w in WL.items():
             an = cached_intervals(w.program, 16)
             rows.append({
                 "workload": name,
@@ -325,10 +352,11 @@ def table_code_size():
 def table_mrf_traffic():
     """§5.2/§5.3 power proxy: MRF access reduction, LTRF vs BL."""
     def run():
+        WL = _workloads()
         _prefill([(n, design_config(d, table2_config=7))
-                  for n in WORKLOADS for d in ("BL", "LTRF", "LTRF_plus")])
+                  for n in WL for d in ("BL", "LTRF", "LTRF_plus")])
         rows = []
-        for name, w in WORKLOADS.items():
+        for name, w in WL.items():
             bl = _sim(w, design_config("BL", table2_config=7))
             lt = _sim(w, design_config("LTRF", table2_config=7))
             lp = _sim(w, design_config("LTRF_plus", table2_config=7))
@@ -345,13 +373,14 @@ def table_mrf_traffic():
 def table_power():
     """§5.3/§1 power claims: same-tech -23%, DWM-8x -46%."""
     def run():
+        WL = _workloads()
         from repro.sim.power import power_comparison
-        _prefill([(n, cfg) for n in WORKLOADS
+        _prefill([(n, cfg) for n in WL
                   for cfg in (baseline_config(),
                               design_config("LTRF", table2_config=7),
                               design_config("LTRF", mrf_latency_mult=1.0,
                                             rf_size_kb=256))])
-        return [power_comparison(w, sim=_sim) for w in WORKLOADS.values()]
+        return [power_comparison(w, sim=_sim) for w in WL.values()]
     return _cached("table_power", run)
 
 

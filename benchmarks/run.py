@@ -39,11 +39,11 @@ def bench_paper_figures() -> None:
         print(f"# {name}: {time.time() - t0:.1f}s", file=sys.stderr)
 
 
-def bench_sim_sweep() -> None:
+def bench_sim_sweep(suite: str | None = None) -> None:
     """Time the tracked paper-figure sweep subset and refresh BENCH_sim.json
     (see benchmarks.bench_sim; pass REPRO_SIM_PROCS to bound the pool)."""
     from benchmarks.bench_sim import run_bench
-    report = run_bench(smoke="--smoke" in sys.argv)
+    report = run_bench(smoke="--smoke" in sys.argv, suite=suite)
     _emit("sim", {k: v for k, v in report.items() if not isinstance(v, dict)})
 
 
@@ -128,10 +128,25 @@ def bench_roofline_summary() -> None:
 
 
 def main() -> None:
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    args = [a for a in sys.argv[1:] if a != "--smoke"]
+    suite = None
+    if "--suite" in args:
+        i = args.index("--suite")
+        if i + 1 >= len(args):
+            sys.exit("--suite requires a value (synth|traced|all)")
+        suite = args[i + 1]
+        if suite not in ("synth", "traced", "all"):
+            sys.exit(f"unknown suite {suite!r} (expected synth|traced|all)")
+        del args[i:i + 2]
+    only = args[0] if args else None
+    if suite:
+        # run the figure set over another workload suite (e.g. the lifted
+        # real kernels: --suite traced); artifacts gain a suffix
+        from benchmarks import paper_figs
+        paper_figs.set_suite(suite)
     benches = {
         "paper": bench_paper_figures,
-        "sim": bench_sim_sweep,
+        "sim": lambda: bench_sim_sweep(suite=suite),
         "kernels": bench_kernels,
         "dryrun": bench_dryrun_summary,
         "roofline": bench_roofline_summary,

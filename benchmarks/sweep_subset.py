@@ -1,22 +1,28 @@
 """The canonical paper-figure sweep subset used for perf tracking.
 
 This is the Fig. 14-shaped grid (both Table-2 design points x all designs x
-the full workload suite, plus the per-workload normalization baselines) that
+the workload suite, plus the per-workload normalization baselines) that
 `BENCH_sim.json` times.  Kept in its own module so the pre/post-change
 measurements are guaranteed to run the *same* job list.
+
+The default job list is pinned to the synthetic suite (`workload_names()`
+with no suite): lazily-registered suites like ``traced`` never change the
+tracked benchmark.  Pass ``suite="traced"`` (or ``"all"``) to sweep the
+real lifted kernels instead.
 """
 from __future__ import annotations
 
 from repro.sim import SimConfig, baseline_config, design_config
-from repro.workloads import WORKLOADS
+from repro.workloads import workload_names
 
 SWEEP_DESIGNS = ("BL", "RFC", "SHRF", "LTRF", "LTRF_conf", "LTRF_plus", "Ideal")
 
 
 def sweep_jobs(workloads=None, designs=SWEEP_DESIGNS,
-               table2_configs=(6, 7)) -> list[tuple[str, SimConfig]]:
+               table2_configs=(6, 7),
+               suite: str | None = None) -> list[tuple[str, SimConfig]]:
     """(workload name, SimConfig) pairs for the tracked sweep subset."""
-    names = list(workloads) if workloads else list(WORKLOADS)
+    names = list(workloads) if workloads else list(workload_names(suite))
     jobs: list[tuple[str, SimConfig]] = []
     for tc in table2_configs:
         for name in names:

@@ -30,6 +30,7 @@ _INTERVALS: dict[tuple, IntervalAnalysis] = {}
 _RENUMBER: dict[tuple, RenumberResult] = {}
 _PREFETCH: dict[tuple, dict[int, PrefetchOp]] = {}
 _SIM_PLANS: dict[tuple, "CompiledPlan"] = {}
+_VALUES: dict[tuple, object] = {}
 _STATS = {"hits": 0, "misses": 0}
 
 # FIFO bound per cache: plenty for the workload suite + sweeps, while a
@@ -56,6 +57,22 @@ def program_fingerprint(prog: Program) -> tuple:
     )
     _put(_FINGERPRINTS, id(prog), (prog, fp))
     return fp
+
+
+def cached_value(key: tuple, build):
+    """Generic memo for expensive frontend artifacts (e.g. jaxpr lifts).
+
+    ``key`` must be a stable, hashable fingerprint of everything ``build``
+    depends on (include a revision constant so behaviour changes invalidate).
+    The cached value is read-only by contract, like every other entry here.
+    """
+    v = _VALUES.get(key)
+    if v is None:
+        _STATS["misses"] += 1
+        v = _put(_VALUES, key, build())
+    else:
+        _STATS["hits"] += 1
+    return v
 
 
 def cached_intervals(prog: Program, n_cap: int,
@@ -178,10 +195,12 @@ def compile_for_sim(prog: Program, design: str, interval_cap: int,
 def cache_stats() -> dict[str, int]:
     return dict(_STATS,
                 intervals=len(_INTERVALS), renumber=len(_RENUMBER),
-                prefetch=len(_PREFETCH), sim_plans=len(_SIM_PLANS))
+                prefetch=len(_PREFETCH), sim_plans=len(_SIM_PLANS),
+                values=len(_VALUES))
 
 
 def cache_clear() -> None:
-    for d in (_FINGERPRINTS, _INTERVALS, _RENUMBER, _PREFETCH, _SIM_PLANS):
+    for d in (_FINGERPRINTS, _INTERVALS, _RENUMBER, _PREFETCH, _SIM_PLANS,
+              _VALUES):
         d.clear()
     _STATS.update(hits=0, misses=0)

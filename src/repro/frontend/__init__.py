@@ -1,0 +1,38 @@
+"""Real-kernel frontend: lift jax computations into the register IR.
+
+* `jaxpr_lift` — walk a `jax.make_jaxpr` trace and lower it to the asm IR
+  (loops/diamonds for control flow, ld/st for operand traffic, tiled inner
+  loops for dot/reduce) over unlimited virtual registers.
+* `regalloc` — linear-scan virtual -> architectural assignment under a
+  configurable ``maxregcount``, with shared-memory spill fallback; produces
+  the ``regs_per_thread`` metadata the occupancy model needs.
+* `workloads` — the traced-workload specs (in-repo kernel references + model
+  layer slices) exposed to the suite registry as the ``traced`` suite.
+
+Attribute access is lazy so importing `repro.frontend` (e.g. for
+`TRACED_NAMES`) never drags in jax.
+"""
+from __future__ import annotations
+
+__all__ = [
+    "lift_fn", "lift_jaxpr", "LiftedProgram", "LIFT_REV",
+    "allocate_registers", "AllocResult",
+    "build_traced_workload", "traced_suite", "TRACED_NAMES", "TRACED_SPECS",
+]
+
+_HOMES = {
+    "lift_fn": "jaxpr_lift", "lift_jaxpr": "jaxpr_lift",
+    "LiftedProgram": "jaxpr_lift", "LIFT_REV": "jaxpr_lift",
+    "allocate_registers": "regalloc", "AllocResult": "regalloc",
+    "build_traced_workload": "workloads", "traced_suite": "workloads",
+    "TRACED_NAMES": "workloads", "TRACED_SPECS": "workloads",
+}
+
+
+def __getattr__(name: str):
+    home = _HOMES.get(name)
+    if home is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(f".{home}", __name__), name)

@@ -1,0 +1,446 @@
+"""Lift jax-traced computations into the PTX-like register IR.
+
+`jax.make_jaxpr` gives us the real dataflow of the repo's kernels and model
+layers; this module lowers that jaxpr into the asm DSL of `repro.core.ir` so
+the whole LTRF compiler pipeline (interval formation, renumbering, prefetch
+scheduling) and both simulator engines run on *real* programs instead of the
+synthetic suite.  The lowering models one GPU thread's tiled slice of the
+computation:
+
+* each jaxpr value is a virtual register (its resident tile);
+* operand materialization, `gather`/`dynamic_slice` and scan inputs become
+  ``ld``; outputs and scatter-like updates become ``st``;
+* ``dot_general`` expands into a 2x2 register-tiled inner loop over the
+  contraction dimension (4 accumulators, the classic GPU inner kernel);
+* reductions expand into an accumulate loop over the reduced extent;
+* ``scan``/``while`` become labelled loops with finite trip counts (the
+  simulator's branch model resolves them through the ``trips`` table) and
+  loop-carried values get dedicated carry registers;
+* ``cond`` becomes an if/else diamond with a predicated branch;
+* call-like primitives (``pjit``, ``remat2``, ``custom_jvp_call``, ...) are
+  inlined.
+
+Virtual registers are unlimited; `repro.frontend.regalloc` lowers them to an
+architectural budget afterwards.  Lifting is deterministic: the same function
+and example shapes produce the identical program text.
+"""
+from __future__ import annotations
+
+import re
+from contextlib import contextmanager
+from dataclasses import dataclass
+from math import prod
+
+from repro.core.ir import Program, parse_asm
+
+# Bump when the lowering changes shape: keys the lift memo in
+# `repro.core.plan_cache.cached_value` so stale lifts never replay.
+LIFT_REV = 1
+
+# Layout/dtype-only primitives: a register-to-register move of the tile.
+_DATA_MOVEMENT = frozenset({
+    "broadcast_in_dim", "reshape", "transpose", "squeeze", "expand_dims",
+    "rev", "slice", "pad", "convert_element_type", "reduce_precision",
+    "copy", "iota", "real", "imag",
+})
+# Primitives that vanish entirely (alias their operand).
+_PASSTHROUGH = frozenset({"stop_gradient"})
+# Long-latency reads / writes of off-chip data.
+_MEM_READ = frozenset({"gather", "dynamic_slice", "take"})
+_MEM_WRITE = frozenset({
+    "scatter", "scatter-add", "scatter_add", "dynamic_update_slice",
+})
+# Reduction-style primitives -> (accumulate op) loops.
+_REDUCE_OPS = {
+    "reduce_sum": "add", "reduce_max": "max", "reduce_min": "min",
+    "reduce_prod": "mul", "reduce_and": "and", "reduce_or": "or",
+    "argmax": "max", "argmin": "min",
+    "cumsum": "add", "cumprod": "mul", "cummax": "max", "cummin": "min",
+    "cumlogsumexp": "add",
+}
+# Friendlier opcode spellings for a few primitives.
+_RENAME = {"integer_pow": "pow", "select_n": "sel", "logistic": "sig",
+           "square": "mul", "concatenate": "cat"}
+# Opcodes with special IR semantics that an ALU op must never shadow.
+_IR_RESERVED = frozenset({"ld", "st", "bra", "call", "exit", "ret", "set"})
+
+
+def _literal_type():
+    try:
+        from jax.extend.core import Literal  # jax >= 0.4.34
+        return Literal
+    except ImportError:  # pragma: no cover - older jax
+        from jax.core import Literal
+        return Literal
+
+
+def _opname(prim: str) -> str:
+    op = _RENAME.get(prim)
+    if op is None:
+        op = re.sub(r"[^a-z]", "", prim.lower())
+    if not op or op in _IR_RESERVED:
+        op = "mov"
+    return op
+
+
+def _tile_trips(n) -> int:
+    """Per-thread trip count for a tiled (data-parallel) extent of size n."""
+    n = int(n) if n else 1
+    if n <= 1:
+        return 1
+    return max(2, min(16, int(round(n ** 0.5))))
+
+
+def _serial_trips(n) -> int:
+    """Trip count for an inherently serial extent (scan/while iterations)."""
+    n = int(n) if n else 1
+    return max(1, min(12, n))
+
+
+@dataclass(frozen=True)
+class LiftedProgram:
+    """A lifted computation: IR program + the trip table the simulator needs."""
+
+    prog: Program
+    trips: dict[str, int]
+    num_virtual_regs: int
+
+
+class _Emitter:
+    def __init__(self, while_trips: int = 8) -> None:
+        self.lines: list[str] = []
+        self.trips: dict[str, int] = {}
+        self.nreg = 0
+        self.npred = 0
+        self.nlab = 0
+        self.while_trips = while_trips
+        self.param_reg = self.fresh()  # base address of the operand space
+
+    def fresh(self) -> int:
+        r = self.nreg
+        self.nreg += 1
+        return r
+
+    def pred(self) -> int:
+        p = self.npred
+        self.npred += 1
+        return p
+
+    def label(self, stem: str) -> str:
+        self.nlab += 1
+        return f"{stem}{self.nlab}"
+
+    def emit(self, line: str) -> None:
+        self.lines.append(line)
+
+    def mov(self, dst: int, src: int | None = None, imm: int = 0) -> int:
+        if src is None:
+            self.emit(f"mov r{dst}, {imm}")
+        else:
+            self.emit(f"mov r{dst}, r{src}")
+        return dst
+
+    def load(self, addr: int | None = None) -> int:
+        d = self.fresh()
+        a = self.param_reg if addr is None else addr
+        self.emit(f"ld r{d}, [r{a}]")
+        return d
+
+    def store(self, val: int, addr: int | None = None) -> None:
+        a = self.param_reg if addr is None else addr
+        self.emit(f"st r{val}, [r{a}]")
+
+    @contextmanager
+    def loop(self, trips: int):
+        """Emit a counted loop; the label lands in the sim's trip table."""
+        lab = self.label("T")
+        ctr, bound = self.fresh(), self.fresh()
+        self.mov(bound, imm=max(trips, 1))
+        self.mov(ctr, imm=0)
+        self.emit(f"{lab}: nop")
+        self.trips[lab] = max(trips, 1)
+        yield lab
+        p = self.pred()
+        self.emit(f"add r{ctr}, r{ctr}, 1")
+        self.emit(f"set p{p}, r{ctr}, r{bound}")
+        self.emit(f"@p{p} bra {lab}")
+
+
+class _Lifter:
+    def __init__(self, em: _Emitter) -> None:
+        self.em = em
+        self.Literal = _literal_type()
+
+    # -- value plumbing ------------------------------------------------------
+    def _src(self, env: dict, atom) -> int | None:
+        if isinstance(atom, self.Literal):
+            return None  # immediates are non-register operands
+        return env[atom]
+
+    def _srcs(self, env: dict, atoms) -> list[int | None]:
+        return [self._src(env, a) for a in atoms]
+
+    def _reg_or_mov(self, s: int | None) -> int:
+        if s is not None:
+            return s
+        return self.em.mov(self.em.fresh())
+
+    def _materialize(self, aval) -> int:
+        """Bring an operand (kernel parameter / captured const) into registers."""
+        if getattr(aval, "shape", ()) == ():
+            return self.em.mov(self.em.fresh(), imm=1)  # scalar: immediate
+        return self.em.load()
+
+    def _bind_out(self, env: dict, outvars, regs) -> None:
+        for v, r in zip(outvars, regs):
+            env[v] = r
+
+    # -- jaxpr traversal -----------------------------------------------------
+    def lift_closed(self, closed, env_args: list[int]) -> list[int]:
+        """Lift a ClosedJaxpr whose invars are bound to ``env_args``."""
+        jaxpr = closed.jaxpr
+        env: dict = {}
+        for cv in jaxpr.constvars:
+            env[cv] = self._materialize(cv.aval)
+        for iv, r in zip(jaxpr.invars, env_args):
+            env[iv] = r
+        self.run(jaxpr, env)
+        return [self._reg_or_mov(self._src(env, ov)) for ov in jaxpr.outvars]
+
+    def run(self, jaxpr, env: dict) -> None:
+        for eqn in jaxpr.eqns:
+            self.eqn(env, eqn)
+
+    def eqn(self, env: dict, eqn) -> None:
+        em = self.em
+        prim = eqn.primitive.name
+        srcs = self._srcs(env, eqn.invars)
+
+        if prim in _PASSTHROUGH and srcs and srcs[0] is not None:
+            env[eqn.outvars[0]] = srcs[0]
+            return
+        sub = self._subjaxpr(eqn)
+        if sub is not None:
+            outs = self.lift_closed(_as_closed(sub),
+                                    [self._reg_or_mov(s) for s in srcs])
+            self._bind_out(env, eqn.outvars, outs)
+            return
+        if prim == "scan":
+            self._scan(env, eqn, srcs)
+            return
+        if prim == "while":
+            self._while(env, eqn, srcs)
+            return
+        if prim == "cond":
+            self._cond(env, eqn, srcs)
+            return
+        if prim == "dot_general":
+            env[eqn.outvars[0]] = self._dot(eqn, srcs)
+            return
+        if prim in _REDUCE_OPS:
+            env[eqn.outvars[0]] = self._reduce(eqn, srcs, _REDUCE_OPS[prim])
+            return
+        if prim in _MEM_READ:
+            addr = next((s for s in srcs if s is not None), None)
+            d = em.load(addr)
+            self._bind_out(env, eqn.outvars, [d] * len(eqn.outvars))
+            return
+        if prim in _MEM_WRITE:
+            ref = self._reg_or_mov(srcs[0] if srcs else None)
+            val = next((s for s in srcs[1:] if s is not None), ref)
+            em.store(val, ref)
+            d = em.mov(em.fresh(), ref)  # the updated aggregate
+            self._bind_out(env, eqn.outvars, [d] * len(eqn.outvars))
+            return
+
+        # Default: data movement -> mov; anything else -> one ALU op.
+        regs = [s for s in srcs if s is not None]
+        d = em.fresh()
+        if prim in _DATA_MOVEMENT or not regs:
+            em.mov(d, regs[0] if regs else None)
+        else:
+            ops = ", ".join(f"r{s}" for s in regs[:3])
+            em.emit(f"{_opname(prim)} r{d}, {ops}")
+        self._bind_out(env, eqn.outvars, [d] * len(eqn.outvars))
+
+    # -- structured primitives ----------------------------------------------
+    def _subjaxpr(self, eqn):
+        """The inner jaxpr of call-like primitives (inlined), else None."""
+        if eqn.primitive.name in ("scan", "while", "cond"):
+            return None
+        for key in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
+            sub = eqn.params.get(key)
+            if sub is not None:
+                return sub
+        return None
+
+    def _dot(self, eqn, srcs) -> int:
+        """dot_general -> register-tiled inner loop over the contraction.
+
+        The register tile adapts to the problem: big output tiles with a deep
+        contraction get the classic 4x4 blocking (16 accumulators — this is
+        what makes real matmul/attention kernels register-sensitive), small
+        ones the cheap 2x2.
+        """
+        em = self.em
+        (lhs_c, _rhs_c), _ = eqn.params["dimension_numbers"]
+        lhs_shape = eqn.invars[0].aval.shape
+        k_extent = prod((lhs_shape[d] for d in lhs_c), start=1)
+        out_extent = prod(eqn.outvars[0].aval.shape, start=1)
+        t = 4 if (out_extent >= 1024 and k_extent >= 32) else 2
+        a_addr = self._reg_or_mov(srcs[0] if srcs else None)
+        b_addr = self._reg_or_mov(srcs[1] if len(srcs) > 1 else None)
+        acc = [em.fresh() for _ in range(t * t)]
+        for c in acc:
+            em.mov(c, imm=0)
+        with em.loop(_tile_trips(k_extent)):
+            a_r = [em.load(a_addr) for _ in range(t)]
+            b_r = [em.load(b_addr) for _ in range(t)]
+            for i in range(t):
+                for j in range(t):
+                    c = acc[i * t + j]
+                    em.emit(f"mad r{c}, r{a_r[i]}, r{b_r[j]}, r{c}")
+        d = em.fresh()
+        em.emit(f"add r{d}, r{acc[0]}, r{acc[1]}")
+        for c in acc[2:]:
+            em.emit(f"add r{d}, r{d}, r{c}")
+        return d
+
+    def _reduce(self, eqn, srcs, op: str) -> int:
+        em = self.em
+        shape = eqn.invars[0].aval.shape
+        axes = eqn.params.get("axes")
+        if axes is None:
+            axis = eqn.params.get("axis")
+            axes = (axis,) if axis is not None else tuple(range(len(shape)))
+        extent = prod((shape[a] for a in axes), start=1) if shape else 1
+        addr = self._reg_or_mov(srcs[0] if srcs else None)
+        acc = em.mov(em.fresh(), imm=0)
+        with em.loop(_tile_trips(extent)):
+            t = em.load(addr)
+            em.emit(f"{op} r{acc}, r{acc}, r{t}")
+        return acc
+
+    def _scan(self, env: dict, eqn, srcs) -> None:
+        em = self.em
+        p = eqn.params
+        n_consts, n_carry = p["num_consts"], p["num_carry"]
+        closed = p["jaxpr"]
+        inner = closed.jaxpr
+        const_srcs = srcs[:n_consts]
+        carry_srcs = srcs[n_consts:n_consts + n_carry]
+        xs_srcs = srcs[n_consts + n_carry:]
+
+        inner_env: dict = {}
+        for cv in inner.constvars:
+            inner_env[cv] = self._materialize(cv.aval)
+        const_regs = [self._reg_or_mov(s) for s in const_srcs]
+        # dedicated loop-carried registers, written back each iteration
+        carry_regs = [em.mov(em.fresh(), s) if s is not None
+                      else em.mov(em.fresh()) for s in carry_srcs]
+        for iv, r in zip(inner.invars[:n_consts], const_regs):
+            inner_env[iv] = r
+        for iv, r in zip(inner.invars[n_consts:n_consts + n_carry], carry_regs):
+            inner_env[iv] = r
+        xs_addr = [self._reg_or_mov(s) for s in xs_srcs]
+
+        y_regs: list[int] = []
+        with em.loop(_serial_trips(p.get("length", 1))):
+            for iv, a in zip(inner.invars[n_consts + n_carry:], xs_addr):
+                inner_env[iv] = em.load(a)  # per-iteration input slice
+            self.run(inner, inner_env)
+            outs = [self._reg_or_mov(self._src(inner_env, ov))
+                    for ov in inner.outvars]
+            for c, nc in zip(carry_regs, outs[:n_carry]):
+                if c != nc:
+                    em.mov(c, nc)
+            y_regs = outs[n_carry:]
+            for y in y_regs:
+                em.store(y)  # stacked output writeback
+        self._bind_out(env, eqn.outvars, carry_regs + y_regs)
+
+    def _while(self, env: dict, eqn, srcs) -> None:
+        em = self.em
+        p = eqn.params
+        cn, bn = p["cond_nconsts"], p["body_nconsts"]
+        cond_consts = [self._reg_or_mov(s) for s in srcs[:cn]]
+        body_consts = [self._reg_or_mov(s) for s in srcs[cn:cn + bn]]
+        carry_regs = [em.mov(em.fresh(), s) if s is not None
+                      else em.mov(em.fresh()) for s in srcs[cn + bn:]]
+        with em.loop(em.while_trips):
+            # the condition's compute happens every iteration too
+            self.lift_closed(p["cond_jaxpr"], cond_consts + carry_regs)
+            outs = self.lift_closed(p["body_jaxpr"], body_consts + carry_regs)
+            for c, nc in zip(carry_regs, outs):
+                if c != nc:
+                    em.mov(c, nc)
+        self._bind_out(env, eqn.outvars, carry_regs)
+
+    def _cond(self, env: dict, eqn, srcs) -> None:
+        em = self.em
+        branches = eqn.params["branches"]
+        idx = self._reg_or_mov(srcs[0] if srcs else None)
+        operands = [self._reg_or_mov(s) for s in srcs[1:]]
+        if len(branches) != 2:
+            outs = self.lift_closed(branches[-1], operands)
+            self._bind_out(env, eqn.outvars, outs)
+            return
+        n_out = len(eqn.outvars)
+        out_regs = [em.fresh() for _ in range(n_out)]
+        p = em.pred()
+        else_l, join_l = em.label("E"), em.label("J")
+        em.emit(f"set p{p}, r{idx}, r{idx}")
+        em.emit(f"@!p{p} bra {else_l}")
+        t_outs = self.lift_closed(branches[1], operands)
+        for o, t in zip(out_regs, t_outs):
+            em.mov(o, t)
+        em.emit(f"bra {join_l}")
+        em.emit(f"{else_l}: nop")
+        f_outs = self.lift_closed(branches[0], operands)
+        for o, f in zip(out_regs, f_outs):
+            em.mov(o, f)
+        em.emit(f"{join_l}: nop")
+        self._bind_out(env, eqn.outvars, out_regs)
+
+
+def _as_closed(jaxpr_like):
+    """Normalize raw Jaxprs (e.g. remat2's param) to a ClosedJaxpr shape."""
+    if hasattr(jaxpr_like, "jaxpr"):
+        return jaxpr_like
+
+    class _Shim:
+        def __init__(self, j):
+            self.jaxpr = j
+            self.consts = ()
+
+    return _Shim(jaxpr_like)
+
+
+def lift_jaxpr(closed, name: str = "traced",
+               while_trips: int = 8) -> LiftedProgram:
+    """Lower a ClosedJaxpr (from `jax.make_jaxpr`) into the register IR."""
+    em = _Emitter(while_trips=while_trips)
+    lifter = _Lifter(em)
+    em.emit(f"mov r{em.param_reg}, PARAMS")
+    args = [lifter._materialize(iv.aval) for iv in closed.jaxpr.invars]
+    outs = lifter.lift_closed(closed, args)
+    for o in outs:
+        em.store(o)
+    em.emit("exit")
+    prog = parse_asm("\n".join(em.lines), name=name)
+    return LiftedProgram(prog=prog, trips=dict(em.trips),
+                         num_virtual_regs=em.nreg)
+
+
+def lift_fn(fn, example_args, name: str = "traced",
+            while_trips: int = 8) -> LiftedProgram:
+    """Trace ``fn`` at ``example_args`` (arrays or ShapeDtypeStructs) and lift.
+
+    Tracing requires jax; callers in jax-free paths should go through
+    `repro.frontend.workloads.build_traced_workload`, which memoizes lifts in
+    the compile cache.
+    """
+    import jax
+
+    closed = jax.make_jaxpr(fn)(*example_args)
+    return lift_jaxpr(closed, name=name, while_trips=while_trips)

@@ -1,7 +1,7 @@
-"""Version compatibility helpers shared by the Pallas TPU kernels."""
+"""Version/environment compatibility helpers shared by the jax-facing code."""
 from __future__ import annotations
 
-from jax.experimental.pallas import tpu as pltpu
+import os
 
 
 def tpu_compiler_params(**kwargs):
@@ -10,6 +10,31 @@ def tpu_compiler_params(**kwargs):
     The class was renamed ``TPUCompilerParams`` -> ``CompilerParams`` in newer
     jax releases; accept either so the kernels run on the full supported range.
     """
+    from jax.experimental.pallas import tpu as pltpu
+
     cls = getattr(pltpu, "CompilerParams", None) \
         or getattr(pltpu, "TPUCompilerParams")
     return cls(**kwargs)
+
+
+def jax_subprocess_env(extra: dict | None = None) -> dict:
+    """Minimal environment for subprocesses that import jax.
+
+    Always pins ``JAX_PLATFORMS`` (defaulting to ``cpu``): without it jax
+    probes for accelerator plugins, which hangs forever on hosts with a
+    TPU-less libtpu — the failure mode behind the seed's
+    ``test_pipeline_parallel`` timeout, and the same class of hang any
+    frontend tracing subprocess would hit.  Use this instead of ad-hoc env
+    dicts whenever spawning a python that will ``import jax``.
+    """
+    env = {
+        "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+        "PYTHONPATH": os.environ.get("PYTHONPATH", "src"),
+        "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu"),
+    }
+    for key in ("HOME", "TMPDIR", "XDG_CACHE_HOME"):
+        if key in os.environ:
+            env[key] = os.environ[key]
+    if extra:
+        env.update(extra)
+    return env

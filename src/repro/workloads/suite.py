@@ -1,13 +1,17 @@
-"""The workload suite: 9 register-sensitive + 5 register-insensitive kernels.
+"""The workload registry + the synthetic suite.
 
-Names and characters mirror the paper's CUDA-SDK / Rodinia / Parboil mix
-(§6, Fig. 3): register-sensitive kernels compile to >32 registers/thread, so
-the 256KB baseline register file caps their occupancy; insensitive kernels fit
-64 warps already.  Also exports the paper's Listing-1 walk-through program.
+`WORKLOADS` is a *registry*: the 14 synthetic kernels (9 register-sensitive +
+5 register-insensitive, mirroring the paper's CUDA-SDK / Rodinia / Parboil
+mix, §6 Fig. 3) register eagerly at import, and further suites register
+lazily via `register_suite` — the ``traced`` suite (the repo's own kernels
+lifted through `repro.frontend`) only traces when first requested, so
+jax-free consumers and the tracked benchmark job list are unaffected.
+Also exports the paper's Listing-1 walk-through program.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Callable, Iterable
 
 from repro.core.ir import Program, parse_asm
 
@@ -98,10 +102,85 @@ def _build_suite() -> dict[str, Workload]:
     return {w.name: w for w in ws}
 
 
-WORKLOADS: dict[str, Workload] = _build_suite()
-REGISTER_SENSITIVE = [w for w in WORKLOADS.values() if w.register_sensitive]
-REGISTER_INSENSITIVE = [w for w in WORKLOADS.values() if not w.register_sensitive]
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+WORKLOADS: dict[str, Workload] = {}
+
+# Suites whose loaders run only on first use (tracing real kernels needs jax).
+_SUITE_LOADERS: dict[str, Callable[[], Iterable[Workload]]] = {}
+_SUITE_NAMES: dict[str, tuple[str, ...]] = {}
+_LOADED_SUITES: set[str] = set()
+
+# The stable synthetic default: sweep/benchmark job lists are built from these
+# suites unless a caller asks for more, so lazily-registered workloads can
+# never silently change the tracked perf artifact.
+SYNTH_SUITES = ("rodinia", "parboil", "cudasdk")
+
+
+def register_workload(w: Workload, replace: bool = False) -> Workload:
+    """Add a workload to the registry (errors on collisions unless asked)."""
+    if not replace and w.name in WORKLOADS:
+        raise ValueError(f"workload {w.name!r} already registered")
+    WORKLOADS[w.name] = w
+    return w
+
+
+def register_suite(suite: str, loader: Callable[[], Iterable[Workload]],
+                   names: Iterable[str]) -> None:
+    """Declare a lazily-built suite.  ``names`` must be known up front so
+    `get_workload` can resolve them without running the loader."""
+    _SUITE_LOADERS[suite] = loader
+    _SUITE_NAMES[suite] = tuple(names)
+
+
+def load_suite(suite: str) -> dict[str, Workload]:
+    """Run a lazy suite's loader (once) and return its workloads."""
+    if suite not in _LOADED_SUITES:
+        loader = _SUITE_LOADERS.get(suite)
+        if loader is not None:
+            for w in loader():
+                register_workload(w, replace=True)
+        _LOADED_SUITES.add(suite)
+    return {n: w for n, w in WORKLOADS.items() if w.suite == suite}
 
 
 def get_workload(name: str) -> Workload:
-    return WORKLOADS[name]
+    w = WORKLOADS.get(name)
+    if w is None:
+        for suite, names in _SUITE_NAMES.items():
+            if name in names:
+                load_suite(suite)
+                break
+        w = WORKLOADS.get(name)
+        if w is None:
+            raise KeyError(name)
+    return w
+
+
+def workload_names(suite: str | None = None) -> tuple[str, ...]:
+    """Workload names for a suite selector.
+
+    ``None``/``"synth"`` -> the stable synthetic default; ``"all"`` -> every
+    suite (loading lazy ones); otherwise that suite's names (loaded on
+    demand).
+    """
+    if suite in (None, "synth"):
+        return tuple(n for n, w in WORKLOADS.items() if w.suite in SYNTH_SUITES)
+    if suite == "all":
+        for s in list(_SUITE_LOADERS):
+            load_suite(s)
+        return tuple(WORKLOADS)
+    if suite in _SUITE_LOADERS:
+        load_suite(suite)
+    names = tuple(n for n, w in WORKLOADS.items() if w.suite == suite)
+    if not names:
+        raise ValueError(f"unknown workload suite {suite!r}")
+    return names
+
+
+for _w in _build_suite().values():
+    register_workload(_w)
+REGISTER_SENSITIVE = [w for w in WORKLOADS.values() if w.register_sensitive]
+REGISTER_INSENSITIVE = [w for w in WORKLOADS.values() if not w.register_sensitive]

@@ -1,0 +1,20 @@
+"""The lazy ``traced`` suite: in-repo kernels lifted through the frontend.
+
+Importing this module only registers the suite's *names*; tracing (which
+needs jax) runs the first time a traced workload is requested via
+`get_workload` / `load_suite` / `workload_names("traced")`.
+"""
+from __future__ import annotations
+
+from repro.frontend.workloads import TRACED_NAMES
+
+from .suite import register_suite
+
+
+def _load():
+    from repro.frontend.workloads import traced_suite
+
+    return traced_suite().values()
+
+
+register_suite("traced", _load, names=TRACED_NAMES)

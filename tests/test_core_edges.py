@@ -1,0 +1,123 @@
+"""Edge-case coverage for prefetch scheduling, coloring, and spill fallback.
+
+The cases the sweep never hits but generated/lifted programs can: intervals
+with empty working sets, single-register programs, interval caps below a
+single instruction's operand count, cliques bigger than the color budget,
+and register budgets below the program's working set (spill path).
+"""
+import pytest
+
+from repro.core.coloring import chaitin_color
+from repro.core.intervals import form_register_intervals
+from repro.core.ir import parse_asm
+from repro.core.prefetch import (code_size_overhead, conflict_distribution,
+                                 prefetch_schedule)
+from repro.frontend.regalloc import allocate_registers
+
+
+# ------------------------------------------------------------------ prefetch
+
+def test_empty_working_set_prefetch():
+    """Register-free programs produce empty, conflict-free prefetch ops."""
+    prog = parse_asm("nop\nnop\nexit", name="empty")
+    an = form_register_intervals(prog, n_cap=8)
+    an.validate()
+    ops = prefetch_schedule(an, num_banks=16)
+    assert ops
+    for op in ops:
+        assert op.bitvector == frozenset()
+        assert op.conflicts == 0
+        assert op.serial_rounds == 1
+    assert conflict_distribution(ops) == {0: 1.0}
+    assert code_size_overhead(an) > 0  # bit-vectors still cost code space
+
+
+def test_conflict_distribution_no_ops():
+    assert conflict_distribution([]) == {0: 1.0}
+
+
+def test_single_register_program():
+    prog = parse_asm("""
+        mov r0, 1
+        add r0, r0, r0
+        exit
+    """, name="one-reg")
+    an = form_register_intervals(prog, n_cap=4)
+    an.validate()
+    assert len(an.intervals) == 1
+    (op,) = prefetch_schedule(an, num_banks=16)
+    assert op.bitvector == frozenset({0})
+    assert op.serial_rounds == 1 and op.conflicts == 0
+
+
+def test_cap_smaller_than_single_instruction():
+    """A mad touching 4 registers under cap 2: the interval must legally
+    exceed the cap (validate's single-instruction escape hatch) and the
+    prefetch still schedules it."""
+    prog = parse_asm("""
+        mov r0, 1
+        mov r1, 2
+        mov r2, 3
+        mad r3, r0, r1, r2
+        exit
+    """, name="wide-instr")
+    an = form_register_intervals(prog, n_cap=2)
+    an.validate()
+    assert any(len(iv.working_set) > 2 for iv in an.intervals)
+    ops = prefetch_schedule(an, num_banks=2)
+    assert max(op.serial_rounds for op in ops) >= 2  # 4 regs over 2 banks
+
+
+# ------------------------------------------------------------------ coloring
+
+def test_uncolorable_clique_fallback():
+    """K5 with 2 colors: every node still gets a color, the shortfall is
+    reported, and usage stays balanced (the paper's 'minimal remaining
+    conflicts' behaviour)."""
+    adj = {i: {j for j in range(5) if j != i} for i in range(5)}
+    c = chaitin_color(adj, 2)
+    assert set(c.colors) == set(range(5))
+    assert all(0 <= v < 2 for v in c.colors.values())
+    assert c.uncolorable
+    assert c.conflicts(adj) > 0
+    usage = [sum(1 for v in c.colors.values() if v == k) for k in range(2)]
+    assert abs(usage[0] - usage[1]) <= 1
+
+
+def test_colorable_clique_exact():
+    adj = {i: {j for j in range(5) if j != i} for i in range(5)}
+    c = chaitin_color(adj, 5)
+    assert not c.uncolorable
+    assert c.conflicts(adj) == 0
+    assert len(set(c.colors.values())) == 5
+
+
+def test_color_empty_graph():
+    c = chaitin_color({}, 4)
+    assert c.colors == {} and not c.uncolorable
+
+
+# ----------------------------------------------------------------- spill path
+
+def test_spill_when_maxregcount_below_working_set():
+    """12 simultaneously-live registers under maxregcount=8: the allocator
+    must spill, insert shuttle ld/st traffic, and stay under budget."""
+    n = 12
+    lines = [f"mov r{i}, {i}" for i in range(n)]
+    # one instruction reading every value keeps them all live to the end
+    for i in range(0, n - 2, 2):
+        lines.append(f"mad r{i}, r{i}, r{i + 1}, r{i + 2}")
+    lines.append("exit")
+    prog = parse_asm("\n".join(lines), name="pressure")
+    res = allocate_registers(prog, maxregcount=8)
+    assert res.spilled
+    assert res.spill_loads > 0 and res.spill_stores > 0
+    assert res.regs_per_thread <= 8
+    assert max(res.prog.registers()) < 8
+    res.prog.validate()
+
+
+def test_maxregcount_too_small_rejected():
+    prog = parse_asm("mov r0, 1\nexit", name="t")
+    with pytest.raises(ValueError):
+        allocate_registers(prog, maxregcount=4)

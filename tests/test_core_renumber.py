@@ -140,8 +140,9 @@ def test_renumbering_never_increases_max_conflicts(name):
 
 def test_suite_conflict_free_fraction_improves():
     """Aggregate §7.3 trend: renumbering raises the conflict-free fraction."""
+    from repro.workloads import workload_names
     pre_free = post_free = total = 0
-    for w in WORKLOADS.values():
+    for w in (WORKLOADS[n] for n in workload_names()):  # the synthetic suite
         an = form_register_intervals(w.program, n_cap=16)
         pre = prefetch_schedule(an, num_banks=16)
         rr = renumber_registers(an, num_banks=16)

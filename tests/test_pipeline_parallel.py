@@ -2,10 +2,11 @@
 
 Runs in a subprocess with XLA_FLAGS forcing 4 host devices so the pipeline
 axis is real (the main test process keeps 1 device)."""
-import os
 import subprocess
 import sys
 import textwrap
+
+from repro.kernels._compat import jax_subprocess_env
 
 SCRIPT = textwrap.dedent("""
     import os
@@ -36,12 +37,8 @@ SCRIPT = textwrap.dedent("""
 
 
 def test_gpipe_matches_sequential():
-    # Force the CPU backend explicitly: without JAX_PLATFORMS, jax probes for
+    # jax_subprocess_env pins JAX_PLATFORMS: without it, jax probes for
     # accelerator plugins, which hangs on hosts with a TPU-less libtpu.
-    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-           "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")}
-    if "HOME" in os.environ:
-        env["HOME"] = os.environ["HOME"]
     r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
-                       text=True, timeout=300, env=env)
+                       text=True, timeout=300, env=jax_subprocess_env())
     assert "PIPELINE_OK" in r.stdout, r.stdout + r.stderr

@@ -18,7 +18,7 @@ import pytest
 
 from repro.sim import DESIGNS, SimConfig, design_config, simulate
 from repro.sim.golden import golden_simulate
-from repro.workloads import WORKLOADS
+from repro.workloads import WORKLOADS, get_workload
 from repro.workloads.suite import Workload, listing1_program
 
 # Every design x a workload slice covering: register-sensitive + insensitive,
@@ -56,7 +56,9 @@ def test_engine_matches_golden_scarce_collectors(design):
 
 
 def test_full_suite_one_design_matches_golden():
-    for name, w in WORKLOADS.items():
+    from repro.workloads import workload_names
+    for name in workload_names():  # synthetic suite (traced: test_frontend)
+        w = WORKLOADS[name]
         cfg = design_config("LTRF", table2_config=6, num_warps=8)
         assert simulate(w, cfg) == golden_simulate(w, cfg), name
 
@@ -90,6 +92,32 @@ def test_listing1_counters_pinned(design):
     got = (r.cycles, r.instructions, r.mrf_accesses, r.rfc_hits,
            r.rfc_accesses)
     assert got == LISTING1_GOLDEN[design], (design, got)
+    # and the golden engine agrees bit-for-bit
+    assert golden_simulate(w, cfg) == r
+
+
+# Exact counters for the lifted ltrf_matmul reference (the traced frontend's
+# flagship kernel) at Table-2 config #7, 16 warps: behavioural drift in the
+# jaxpr lifter, the register allocator, OR the engine shows up here.
+TRACED_MATMUL_GOLDEN = {
+    "BL":        (7857, 5584, 16000, 0, 0),
+    "RFC":       (5878, 5584, 7803, 8197, 16000),
+    "SHRF":      (10557, 5584, 13416, 16000, 16000),
+    "LTRF":      (7180, 5584, 11552, 16000, 16000),
+    "LTRF_conf": (6719, 5584, 11552, 16000, 16000),
+    "LTRF_plus": (5468, 5584, 2512, 16000, 16000),
+    "Ideal":     (5381, 5584, 0, 0, 0),
+}
+
+
+@pytest.mark.parametrize("design", DESIGNS)
+def test_traced_matmul_counters_pinned(design):
+    w = get_workload("traced_matmul")  # lifts via jax on first call
+    cfg = design_config(design, table2_config=7, num_warps=16)
+    r = simulate(w, cfg)
+    got = (r.cycles, r.instructions, r.mrf_accesses, r.rfc_hits,
+           r.rfc_accesses)
+    assert got == TRACED_MATMUL_GOLDEN[design], (design, got)
     # and the golden engine agrees bit-for-bit
     assert golden_simulate(w, cfg) == r
 

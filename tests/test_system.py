@@ -13,7 +13,13 @@ from repro.core import (
 )
 from repro.core.plan import LayerNode, Tile, plan_layer_stream
 from repro.sim import baseline_config, design_config, simulate
-from repro.workloads import WORKLOADS, listing1_program
+from repro.workloads import WORKLOADS, listing1_program, workload_names
+
+
+def _synth_workloads():
+    """The paper's synthetic mix: these claims are about that suite, so pin
+    it explicitly — the registry may hold lazily-loaded traced kernels too."""
+    return [WORKLOADS[n] for n in workload_names()]
 
 
 def test_paper_headline_claim():
@@ -22,7 +28,7 @@ def test_paper_headline_claim():
     calibrated model reproduces the direction and per-workload gains)."""
     import math
     vals = []
-    for w in (w for w in WORKLOADS.values() if w.register_sensitive):
+    for w in (w for w in _synth_workloads() if w.register_sensitive):
         base = simulate(w, baseline_config()).ipc
         conf = simulate(w, design_config("LTRF_conf", table2_config=7)).ipc
         vals.append(conf / base)
@@ -37,7 +43,7 @@ def test_ltrf_beats_bl_and_rfc_at_slow_mrf():
     r = {}
     for d in ("BL", "RFC", "LTRF", "LTRF_conf"):
         vals = []
-        for w in WORKLOADS.values():
+        for w in _synth_workloads():
             base = simulate(w, baseline_config()).ipc
             vals.append(simulate(w, design_config(d, table2_config=7)).ipc / base)
         r[d] = math.exp(sum(math.log(v) for v in vals) / len(vals))
