@@ -11,10 +11,18 @@ figure harness to reuse, and a replay pass through the disk cache records
 SimRunner hit/miss counters in the report — a cache-layer regression shows
 up as ``replay_all_hits: false`` in the artifact.
 
+Every full run also executes a multi-SM scheduler-sensitivity mini-sweep
+(`benchmarks.sweep_subset.gpu_sweep_jobs`) through the orchestrator's GPU
+path and records per-config whole-GPU IPC + RF power under ``gpu_sweep``
+in the report, so multi-SM/scheduler drift shows up in the tracked
+artifact.  ``--gpu-smoke`` runs just that sweep (the CI GPU-scale step;
+``--smoke`` stays a minimal 2x2 so CI never pays the GPU sweep twice).
+
 Usage::
 
     python -m benchmarks.bench_sim              # full tracked sweep
     python -m benchmarks.bench_sim --smoke      # 2 workloads x 2 designs (CI)
+    python -m benchmarks.bench_sim --gpu-smoke  # GPU mini-sweep only (CI)
     python -m benchmarks.bench_sim --suite traced   # sweep the lifted
                                                 # real kernels (untracked)
     python -m benchmarks.bench_sim --baseline   # re-measure the golden
@@ -30,7 +38,7 @@ import sys
 import time
 
 from benchmarks.orchestrator import SimRunner, default_processes
-from benchmarks.sweep_subset import SWEEP_DESIGNS, sweep_jobs
+from benchmarks.sweep_subset import SWEEP_DESIGNS, gpu_sweep_jobs, sweep_jobs
 from repro.workloads import get_workload
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
@@ -71,6 +79,37 @@ def measure_fast_path(jobs, processes=None) -> dict:
     }
 
 
+def measure_gpu_sweep(processes=None, num_sms: int = 2,
+                      warps_per_sm: int = 16) -> dict:
+    """Multi-SM scheduler-sensitivity mini-sweep through the orchestrator.
+
+    Small enough to run on every full benchmark invocation (and as the CI
+    GPU-scale smoke step); the per-config whole-GPU IPCs and §5.3 RF-power
+    proxy land in BENCH_sim.json so scheduler/multi-SM behavioural drift
+    is visible in the tracked artifact."""
+    from repro.sim.power import gpu_rf_power
+
+    runner = SimRunner(processes=processes, disk_cache=False)
+    jobs = gpu_sweep_jobs(num_sms=num_sms, warps_per_sm=warps_per_sm)
+    t0 = time.time()
+    runner.prefill_gpu(jobs)
+    rows = []
+    for name, cfg in jobs:
+        res = runner.sim_gpu(name, cfg)
+        # gpu_sweep_jobs pins Table-2 config #7: the DWM 8x design point
+        rows.append({"workload": name, "design": cfg.design,
+                     "scheduler": cfg.scheduler,
+                     "ipc": round(res.ipc, 4),
+                     "instructions": res.instructions,
+                     "sm_imbalance": round(res.sm_imbalance, 4),
+                     "rf_power": round(gpu_rf_power(res, "dwm",
+                                                    cap_mult=8).total, 4)})
+    wall = time.time() - t0
+    return {"num_sms": num_sms, "warps_per_sm": warps_per_sm,
+            "gpu_sims": len(jobs), "per_sm_sims": len(jobs) * num_sms,
+            "wall_s": round(wall, 2), "results": rows}
+
+
 def measure_golden_serial(jobs) -> dict:
     from repro.sim.golden import golden_simulate
     t0 = time.time()
@@ -106,6 +145,8 @@ def run_bench(smoke: bool = False, processes: int | None = None,
     print(f"# sim cache: timing_run={cache['timing_run']} "
           f"replay={cache['replay']} all_hits={cache['replay_all_hits']}",
           file=sys.stderr)
+    if not smoke:  # CI runs the GPU sweep as its own --gpu-smoke step
+        report["gpu_sweep"] = measure_gpu_sweep(processes=processes)
     tracked = not smoke and suite in (None, "synth")
     if tracked and BASELINE_PATH.exists():
         base = json.loads(BASELINE_PATH.read_text())
@@ -131,8 +172,15 @@ def main(argv=None) -> None:
     ap.add_argument("--baseline", action="store_true",
                     help="re-measure the golden engine serially and rewrite "
                          "the committed baseline")
+    ap.add_argument("--gpu-smoke", action="store_true",
+                    help="run only the multi-SM scheduler-sensitivity "
+                         "mini-sweep (CI GPU-scale smoke)")
     ap.add_argument("--procs", type=int, default=None)
     args = ap.parse_args(argv)
+    if args.gpu_smoke:
+        report = measure_gpu_sweep(processes=args.procs)
+        print(json.dumps(report, indent=1))
+        return
     if args.baseline:
         report = measure_golden_serial(sweep_jobs())
         BASELINE_PATH.parent.mkdir(parents=True, exist_ok=True)

@@ -24,6 +24,7 @@ from dataclasses import asdict
 
 from repro.sim import SimConfig, SimResult, simulate
 from repro.sim.engine import ENGINE_REV
+from repro.sim.gpu import GpuResult, aggregate, per_sm_configs
 from repro.workloads import get_workload
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
@@ -115,6 +116,24 @@ class SimRunner:
             self._memo[job] = res
             self._disk_store(job, res)
         return res
+
+    def sim_gpu(self, workload, cfg: SimConfig) -> GpuResult:
+        """One whole-GPU simulation: the per-SM jobs go through the memo /
+        disk cache (and the pool, if several SMs miss), then aggregate.
+
+        GPU sweeps therefore reuse the compile cache across SMs (the per-SM
+        configs only differ in warp share / seed / DRAM interval, none of
+        which key the compiler passes) and replay per-SM results from disk.
+        """
+        name = workload if isinstance(workload, str) else workload.name
+        jobs = [(name, c) for c in per_sm_configs(cfg)]
+        self.prefill(jobs)
+        return aggregate(cfg, [self.sim(*job) for job in jobs], name)
+
+    def prefill_gpu(self, jobs: list[Job]) -> None:
+        """Expand whole-GPU jobs into their per-SM jobs and prefill those."""
+        self.prefill([(name, c) for name, cfg in jobs
+                      for c in per_sm_configs(cfg)])
 
     def prefill(self, jobs: list[Job]) -> None:
         """Execute all cache-missing jobs, across the process pool."""

@@ -255,6 +255,55 @@ def fig20_warps_per_sm():
     return _cached("fig20_wpsm", run)
 
 
+def fig20_gpu_scale():
+    """Fig 20 (GPU scale): whole-GPU IPC vs warps-per-SM x scheduler policy.
+
+    Runs the multi-SM model (`repro.sim.gpu`) at 4 SMs: for each
+    warps-per-SM point and scheduler policy, normalized whole-GPU IPC of
+    BL/LTRF at Table-2 config #7 against the whole-GPU baseline.  Per-SM
+    jobs are prefilled through the orchestrator, so the sweep parallelizes
+    across SMs and replays from the sim cache."""
+    NUM_SMS = 4
+    WPS = (8, 16, 32, 64)
+    SCHEDS = ("two_level", "gto", "lrr")
+    DESIGNS = ("BL", "LTRF")
+
+    def run():
+        from repro.sim.gpu import gpu_jobs, simulate_gpu
+        WL = _workloads()
+
+        def gcfg(d, wps, sched):
+            return design_config(d, table2_config=7,
+                                 num_warps=wps * NUM_SMS, num_sms=NUM_SMS,
+                                 scheduler=sched)
+
+        def bcfg(wps):
+            return baseline_config(num_warps=wps * NUM_SMS, num_sms=NUM_SMS)
+
+        jobs = []
+        for n in WL:
+            for wps in WPS:
+                jobs += gpu_jobs(n, bcfg(wps))
+                for sched in SCHEDS:
+                    for d in DESIGNS:
+                        jobs += gpu_jobs(n, gcfg(d, wps, sched))
+        _prefill(jobs)
+        rows = []
+        for wps in WPS:
+            for sched in SCHEDS:
+                for d in DESIGNS:
+                    vals = []
+                    for w in WL.values():
+                        base = simulate_gpu(w, bcfg(wps), sim=_sim).ipc
+                        g = simulate_gpu(w, gcfg(d, wps, sched), sim=_sim)
+                        vals.append(g.ipc / base)
+                    rows.append({"num_sms": NUM_SMS, "warps_per_sm": wps,
+                                 "scheduler": sched, "design": d,
+                                 "geomean_ipc": gm(vals)})
+        return rows
+    return _cached("fig20_gpu", run)
+
+
 def table4_interval_length():
     """Table 4: real vs optimal register-interval length (dyn instructions)."""
     def run():
@@ -393,6 +442,7 @@ ALL_FIGS = {
     "fig18_warps": fig18_active_warps,
     "fig19_strands": fig19_strands,
     "fig20_wpsm": fig20_warps_per_sm,
+    "fig20_gpu": fig20_gpu_scale,
     "table4_intervals": table4_interval_length,
     "table_code_size": table_code_size,
     "table_mrf_traffic": table_mrf_traffic,

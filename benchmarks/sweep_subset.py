@@ -17,6 +17,24 @@ from repro.workloads import workload_names
 
 SWEEP_DESIGNS = ("BL", "RFC", "SHRF", "LTRF", "LTRF_conf", "LTRF_plus", "Ideal")
 
+GPU_SCHEDULERS = ("two_level", "gto", "lrr")
+
+
+def gpu_sweep_jobs(num_sms: int = 2, warps_per_sm: int = 16,
+                   workloads=("srad", "bfs"), designs=("BL", "LTRF"),
+                   schedulers=GPU_SCHEDULERS,
+                   table2_config: int = 7) -> list[tuple[str, SimConfig]]:
+    """The multi-SM scheduler-sensitivity mini-sweep recorded in
+    BENCH_sim.json (and run as the CI GPU-scale smoke).  Each job's config
+    is a *whole-GPU* config: run it through `SimRunner.sim_gpu` /
+    `repro.sim.gpu.simulate_gpu`, not the single-SM engine."""
+    return [
+        (name, design_config(d, table2_config=table2_config,
+                             num_warps=warps_per_sm * num_sms,
+                             num_sms=num_sms, scheduler=s))
+        for name in workloads for d in designs for s in schedulers
+    ]
+
 
 def sweep_jobs(workloads=None, designs=SWEEP_DESIGNS,
                table2_configs=(6, 7),

@@ -1,11 +1,15 @@
-from .engine import SimConfig, SimResult, Simulator, simulate, DESIGNS
+from .engine import (
+    DESIGNS, SCHEDULERS, SimConfig, SimResult, Simulator, simulate,
+)
 from .designs import (
     TABLE2, baseline_config, design_config, max_tolerable_latency,
     normalized_ipc, run,
 )
+from .gpu import GpuResult, simulate_gpu
 
 __all__ = [
     "SimConfig", "SimResult", "Simulator", "simulate", "DESIGNS",
+    "SCHEDULERS", "GpuResult", "simulate_gpu",
     "TABLE2", "baseline_config", "design_config", "max_tolerable_latency",
     "normalized_ipc", "run",
 ]

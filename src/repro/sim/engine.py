@@ -53,6 +53,13 @@ _CACHED_DESIGNS = frozenset({"LTRF", "LTRF_conf", "LTRF_plus", "SHRF"})
 # Designs that prefetch the next interval at block edges.
 _EDGE_PREFETCH = frozenset({"LTRF", "LTRF_conf", "SHRF"})
 
+# Warp-scheduler policies (see repro.sim.gpu for the policy table):
+#   two_level - the paper's scheduler: `active_slots` active warps, L1-miss
+#               stalls swap the warp out (write-back + re-prefetch when cached)
+#   gto       - greedy-then-oldest over all resident warps, no deactivation
+#   lrr       - loose round-robin over all resident warps, no deactivation
+SCHEDULERS = ("two_level", "gto", "lrr")
+
 
 @dataclass(frozen=True)
 class SimConfig:
@@ -77,6 +84,10 @@ class SimConfig:
     max_inflight_prefetch: int = 12
     dram_interval: int = 4         # cycles between DRAM line services (bw/SM)
     seed: int = 0
+    scheduler: str = "two_level"   # warp-scheduler policy (SCHEDULERS)
+    num_sms: int = 1               # SMs on the chip; >1 via repro.sim.gpu
+    mem_partitions: int = 0        # DRAM partitions feeding the SMs
+                                   # (0 = one per SM, i.e. uncontended)
 
     @property
     def mrf_cycles(self) -> float:
@@ -142,6 +153,13 @@ class _Warp:
 
 class Simulator:
     def __init__(self, cfg: SimConfig, workload: Workload) -> None:
+        if cfg.num_sms != 1:
+            raise ValueError(
+                f"Simulator models one SM (num_sms={cfg.num_sms}); "
+                "use repro.sim.gpu.simulate_gpu for whole-GPU runs")
+        if cfg.scheduler not in SCHEDULERS:
+            raise ValueError(
+                f"unknown scheduler {cfg.scheduler!r}; one of {SCHEDULERS}")
         self.cfg = cfg
         self.w = workload
         plan = compile_for_sim(workload.program, cfg.design,
@@ -178,6 +196,8 @@ class Simulator:
         self._instr_meta = meta
         self._done_dirty = False
         self._stall_pure = True
+        self._sched = cfg.scheduler
+        self._gto_last = -1
 
     # ------------------------------------------------------------------ static
     def _occupancy(self) -> int:
@@ -195,7 +215,12 @@ class Simulator:
         # RFC is a plain hardware cache shared by ALL resident warps -- the
         # paper's Fig. 4 thrashing story (8-30% hit rate) requires the full
         # warp population to contend for the 128 entries.
-        two_level = cached
+        # Only the two_level policy restricts issue to `active_slots` warps
+        # and swaps out memory-stalled warps; gto/lrr schedule over the whole
+        # resident population (prefetch still runs on activation/interval
+        # edges for the cached designs, but there is no deactivation churn).
+        two_level = cached and self._sched == "two_level"
+        use_gto = self._sched == "gto"
         resident_cap = res.resident_warps
         active_cap = min(cfg.active_slots, resident_cap) if two_level else resident_cap
 
@@ -288,11 +313,14 @@ class Simulator:
             issued_now = 0
             mem_stalled: list[tuple[int, float]] = []
             for _ in range(issue_width):
-                wid = self._pick(warps, active, cycle, mem_stalled, two_level)
+                wid = (self._pick_gto(warps, active, cycle) if use_gto else
+                       self._pick(warps, active, cycle, mem_stalled, two_level))
                 if wid is None:
                     break
                 if self._issue(warps[wid], cycle, rfc_lru):
                     issued_now += 1
+                    if use_gto:
+                        self._gto_last = wid
                 elif self._stall_pure:
                     # Pure structural stall: the failed issue consumed nothing,
                     # so the seed's remaining issue slots would re-pick this
@@ -434,6 +462,34 @@ class Simulator:
                     blocked = t
             if blocked:
                 mem_stalled.append((wid, blocked))
+        return None
+
+    def _pick_gto(self, warps, active, cycle):
+        """Greedy-then-oldest: keep issuing from the warp that issued last;
+        when it can't, fall back to the oldest ready warp (lowest wid —
+        ``active`` is filled in admission order and only shrinks, so it is
+        ascending by wid whenever this policy is selected)."""
+        last = self._gto_last
+        if 0 <= last and warps[last].status == ACTIVE:
+            order = [last]
+            order.extend(active)
+        else:
+            order = active
+        for wid in order:
+            wp = warps[wid]
+            if wp.status != ACTIVE:
+                continue
+            if wp.c_ver == wp.ver:
+                ins = wp.c_ins
+            else:
+                ins = self._fetch(wp)
+                if ins is None:
+                    wp.status = DONE
+                    self._done_dirty = True
+                    continue
+                self._refresh_ready(wp, ins)
+            if wp.c_maxrdy <= cycle:
+                return wid
         return None
 
     def _fetch(self, wp: _Warp) -> Instr | None:

@@ -13,7 +13,7 @@ The paper's claims this reproduces:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 
 from .engine import SimResult
 
@@ -54,6 +54,20 @@ def rf_power(res: SimResult, tech: str = "hp-sram", cap_mult: int = 1,
         static += RFC_STATIC + WCB_OVERHEAD
     return PowerReport(design=res.design, tech=tech,
                        dynamic=dyn / cycles, static=static)
+
+
+def gpu_rf_power(res, tech: str = "hp-sram", cap_mult: int = 1,
+                 has_cache: bool | None = None) -> PowerReport:
+    """Whole-GPU register-file power for a `repro.sim.gpu.GpuResult`.
+
+    Dynamic energy is the chip-wide access total spread over the GPU's
+    wall-clock (`GpuResult` sums the counters and takes the slowest SM's
+    cycles — all SMs burn energy concurrently, so `rf_power`'s per-cycle
+    arithmetic applies unchanged); static power is the per-SM static term
+    times ``num_sms`` (idle SMs still leak).
+    """
+    p = rf_power(res, tech, cap_mult=cap_mult, has_cache=has_cache)
+    return replace(p, static=p.static * res.num_sms)
 
 
 def power_comparison(workload, table2_config: int = 7, sim=None):

@@ -126,3 +126,41 @@ def test_simulation_repeatable_across_instances():
     w = listing1_workload()
     cfg = SimConfig(design="LTRF_conf", num_warps=24, mrf_latency_mult=6.3)
     assert simulate(w, cfg) == simulate(w, cfg)
+
+
+def test_gpu_num_sms1_two_level_bit_identical():
+    """ISSUE 3 acceptance pin: the whole-GPU model at ``num_sms=1`` with the
+    two-level scheduler must reproduce today's single-SM counters
+    bit-identically — including through the frozen golden engine."""
+    from repro.sim.gpu import per_sm_configs, simulate_gpu
+
+    for name in ("srad", "btree"):
+        w = WORKLOADS[name]
+        cfg = design_config("LTRF", table2_config=7, num_warps=16)
+        assert cfg.num_sms == 1 and cfg.scheduler == "two_level"
+        # the dispatcher degenerates to the input config itself
+        assert per_sm_configs(cfg) == [cfg]
+        r = simulate(w, cfg)
+        g = simulate_gpu(w, cfg)
+        assert g.per_sm == (r,), name
+        got = (g.cycles, g.instructions, g.mrf_accesses, g.rfc_hits,
+               g.rfc_accesses, g.prefetch_ops, g.writeback_regs,
+               g.activations)
+        want = (r.cycles, r.instructions, r.mrf_accesses, r.rfc_hits,
+                r.rfc_accesses, r.prefetch_ops, r.writeback_regs,
+                r.activations)
+        assert got == want, name
+        assert golden_simulate(w, cfg) == r, name
+
+
+def test_gpu_listing1_num_sms1_matches_pins():
+    """The GPU path reproduces the exact Listing-1 pinned counters."""
+    from repro.sim.gpu import simulate_gpu
+
+    w = listing1_workload()
+    for design in DESIGNS:
+        g = simulate_gpu(w, design_config(design, table2_config=7,
+                                          num_warps=16))
+        got = (g.cycles, g.instructions, g.mrf_accesses, g.rfc_hits,
+               g.rfc_accesses)
+        assert got == LISTING1_GOLDEN[design], (design, got)
