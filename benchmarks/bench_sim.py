@@ -17,12 +17,19 @@ path and records per-config whole-GPU IPC + RF power under ``gpu_sweep``
 in the report, so multi-SM/scheduler drift shows up in the tracked
 artifact.  ``--gpu-smoke`` runs just that sweep (the CI GPU-scale step;
 ``--smoke`` stays a minimal 2x2 so CI never pays the GPU sweep twice).
+Likewise the §4.3 bank-arbitration/renumbering ablation
+(`benchmarks.sweep_subset.bank_sweep_jobs`) lands under ``bank_sweep`` —
+including the two acceptance verdicts (ICG renumbering strictly reduces
+aggregate bank-conflict cycles, and never loses IPC per workload) — and
+``--bank-smoke`` runs it standalone for CI.
 
 Usage::
 
     python -m benchmarks.bench_sim              # full tracked sweep
     python -m benchmarks.bench_sim --smoke      # 2 workloads x 2 designs (CI)
     python -m benchmarks.bench_sim --gpu-smoke  # GPU mini-sweep only (CI)
+    python -m benchmarks.bench_sim --bank-smoke # bank/renumbering ablation
+                                                # only (CI)
     python -m benchmarks.bench_sim --suite traced   # sweep the lifted
                                                 # real kernels (untracked)
     python -m benchmarks.bench_sim --baseline   # re-measure the golden
@@ -38,7 +45,9 @@ import sys
 import time
 
 from benchmarks.orchestrator import SimRunner, default_processes
-from benchmarks.sweep_subset import SWEEP_DESIGNS, gpu_sweep_jobs, sweep_jobs
+from benchmarks.sweep_subset import (
+    SWEEP_DESIGNS, bank_sweep_jobs, gpu_sweep_jobs, sweep_jobs,
+)
 from repro.workloads import get_workload
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
@@ -110,6 +119,49 @@ def measure_gpu_sweep(processes=None, num_sms: int = 2,
             "wall_s": round(wall, 2), "results": rows}
 
 
+def measure_bank_sweep(processes=None, suite: str | None = None) -> dict:
+    """The §4.3 bank-arbitration/renumbering ablation (BENCH_sim.json's
+    ``bank_sweep`` section; CI's ``--bank-smoke`` step).
+
+    Runs BL, LTRF_conf(icg) and LTRF_conf(identity) under
+    ``bank_model="arbitrated"`` over the tracked workload suite and records
+    per-config bank-conflict counters + IPC, plus the two aggregate verdicts
+    the ISSUE-4 acceptance pins: ICG renumbering must show strictly fewer
+    bank-conflict cycles in aggregate and per-workload IPC >= identity."""
+    runner = SimRunner(processes=processes, disk_cache=False)
+    jobs = bank_sweep_jobs(suite=suite)
+    t0 = time.time()
+    runner.prefill(jobs)
+    rows = []
+    for name, cfg in jobs:
+        res = runner.sim(name, cfg)
+        rows.append({"workload": name, "design": cfg.design,
+                     "renumber": cfg.renumber,
+                     "ipc": round(res.ipc, 4),
+                     "bank_conflicts": res.bank_conflicts,
+                     "bank_conflict_cycles": res.bank_conflict_cycles,
+                     "conflicts_per_kinstr":
+                         round(1000 * res.bank_conflict_rate, 3)})
+    wall = time.time() - t0
+    icg = {r["workload"]: r for r in rows
+           if r["design"] == "LTRF_conf" and r["renumber"] == "icg"}
+    ident = {r["workload"]: r for r in rows
+             if r["design"] == "LTRF_conf" and r["renumber"] == "identity"}
+    icg_cycles = sum(r["bank_conflict_cycles"] for r in icg.values())
+    ident_cycles = sum(r["bank_conflict_cycles"] for r in ident.values())
+    return {
+        "bank_model": "arbitrated",
+        "sims": len(jobs),
+        "wall_s": round(wall, 2),
+        "icg_conflict_cycles": icg_cycles,
+        "identity_conflict_cycles": ident_cycles,
+        "icg_strictly_fewer_conflict_cycles": icg_cycles < ident_cycles,
+        "icg_ipc_ge_identity_all_workloads": all(
+            icg[n]["ipc"] >= ident[n]["ipc"] for n in icg),
+        "results": rows,
+    }
+
+
 def measure_golden_serial(jobs) -> dict:
     from repro.sim.golden import golden_simulate
     t0 = time.time()
@@ -145,8 +197,10 @@ def run_bench(smoke: bool = False, processes: int | None = None,
     print(f"# sim cache: timing_run={cache['timing_run']} "
           f"replay={cache['replay']} all_hits={cache['replay_all_hits']}",
           file=sys.stderr)
-    if not smoke:  # CI runs the GPU sweep as its own --gpu-smoke step
+    if not smoke:  # CI runs the GPU/bank sweeps as their own smoke steps
         report["gpu_sweep"] = measure_gpu_sweep(processes=processes)
+        report["bank_sweep"] = measure_bank_sweep(processes=processes,
+                                                  suite=suite)
     tracked = not smoke and suite in (None, "synth")
     if tracked and BASELINE_PATH.exists():
         base = json.loads(BASELINE_PATH.read_text())
@@ -175,10 +229,17 @@ def main(argv=None) -> None:
     ap.add_argument("--gpu-smoke", action="store_true",
                     help="run only the multi-SM scheduler-sensitivity "
                          "mini-sweep (CI GPU-scale smoke)")
+    ap.add_argument("--bank-smoke", action="store_true",
+                    help="run only the bank-arbitration/renumbering "
+                         "ablation sweep (CI bank smoke)")
     ap.add_argument("--procs", type=int, default=None)
     args = ap.parse_args(argv)
     if args.gpu_smoke:
         report = measure_gpu_sweep(processes=args.procs)
+        print(json.dumps(report, indent=1))
+        return
+    if args.bank_smoke:
+        report = measure_bank_sweep(processes=args.procs, suite=args.suite)
         print(json.dumps(report, indent=1))
         return
     if args.baseline:

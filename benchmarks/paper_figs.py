@@ -193,6 +193,49 @@ def fig17_cap_sensitivity():
     return _cached("fig17_cap", run)
 
 
+def fig17_bank_ablation():
+    """Fig 17-style §4.3 ablation: bank arbitration + register renumbering.
+
+    Under ``bank_model="arbitrated"`` (operand reads/writebacks contend for
+    register banks), compares LTRF with the full ICG renumbering pipeline
+    against the same design with the coloring pass ablated
+    (``renumber="identity"``) and the BL reference, at Table-2 config #7.
+    Reports per-workload bank-conflict rate (extra serialization rounds per
+    1k instructions) and IPC normalized to the §6 baseline, plus a geomean
+    summary row.  Runs over the synthetic suite by default and the lifted
+    real kernels with ``--suite traced``."""
+    VARIANTS = (("BL", "icg", "BL"),
+                ("LTRF_conf", "icg", "LTRF"),
+                ("LTRF_conf", "identity", "LTRF_norenumber"))
+
+    def run():
+        WL = _workloads()
+
+        def cfg_for(d, rn):
+            return design_config(d, table2_config=7,
+                                 bank_model="arbitrated", renumber=rn)
+
+        _prefill([(n, baseline_config()) for n in WL]
+                 + [(n, cfg_for(d, rn)) for n in WL for d, rn, _ in VARIANTS])
+        rows = []
+        gmeans = {tag: [] for _, _, tag in VARIANTS}
+        for name, w in WL.items():
+            base = _sim(w, baseline_config()).ipc
+            row = {"workload": name}
+            for d, rn, tag in VARIANTS:
+                r = _sim(w, cfg_for(d, rn))
+                row[f"{tag}_ipc"] = r.ipc / base
+                row[f"{tag}_conflicts_per_kinstr"] = \
+                    1000 * r.bank_conflict_rate
+                row[f"{tag}_conflict_cycles"] = r.bank_conflict_cycles
+                gmeans[tag].append(r.ipc / base)
+            rows.append(row)
+        rows.append({"workload": "geomean",
+                     **{f"{tag}_ipc": gm(v) for tag, v in gmeans.items()}})
+        return rows
+    return _cached("fig17_bank", run)
+
+
 def fig18_active_warps():
     """Fig 18: IPC vs number of active warps."""
     def run():
@@ -439,6 +482,7 @@ ALL_FIGS = {
     "fig15_tolerable": fig15_tolerable_latency,
     "fig16_conflicts": fig16_conflicts,
     "fig17_cap": fig17_cap_sensitivity,
+    "fig17_bank": fig17_bank_ablation,
     "fig18_warps": fig18_active_warps,
     "fig19_strands": fig19_strands,
     "fig20_wpsm": fig20_warps_per_sm,

@@ -19,6 +19,30 @@ SWEEP_DESIGNS = ("BL", "RFC", "SHRF", "LTRF", "LTRF_conf", "LTRF_plus", "Ideal")
 
 GPU_SCHEDULERS = ("two_level", "gto", "lrr")
 
+# The §4.3 renumbering-ablation comparison points: LTRF with the full ICG
+# renumbering pipeline, the same design with the coloring pass ablated
+# (identity numbering), and the BL reference — all under the arbitrated
+# bank model so operand/writeback conflicts are actually charged.
+BANK_VARIANTS = (
+    ("BL", "icg"),
+    ("LTRF_conf", "icg"),
+    ("LTRF_conf", "identity"),
+)
+
+
+def bank_sweep_jobs(workloads=None, table2_config: int = 7,
+                    variants=BANK_VARIANTS,
+                    suite: str | None = None) -> list[tuple[str, SimConfig]]:
+    """The bank-arbitration/renumbering ablation recorded in BENCH_sim.json
+    (and run as the CI bank smoke).  Single-SM configs: run them through
+    `SimRunner.sim` like the main sweep."""
+    names = list(workloads) if workloads else list(workload_names(suite))
+    return [
+        (name, design_config(d, table2_config=table2_config,
+                             bank_model="arbitrated", renumber=rn))
+        for name in names for d, rn in variants
+    ]
+
 
 def gpu_sweep_jobs(num_sms: int = 2, warps_per_sm: int = 16,
                    workloads=("srad", "bfs"), designs=("BL", "LTRF"),

@@ -23,6 +23,12 @@ from .ir import Program
 from .prefetch import PrefetchOp, prefetch_schedule
 from .renumber import RenumberResult, bank_of, renumber_registers
 
+# Compiled-plan layout revision: part of every _SIM_PLANS key (and available
+# to any consumer deriving persistent keys from plans).  Bump when
+# CompiledPlan gains/changes fields or the packaging itself changes behavior.
+# rev 2: per-instruction operand bank vectors (instr_banks) + renumber axis.
+PLAN_REV = 2
+
 # program id -> (program ref, fingerprint).  The strong reference keeps the
 # id stable for the lifetime of the entry.
 _FINGERPRINTS: dict[int, tuple[Program, tuple]] = {}
@@ -126,7 +132,11 @@ class CompiledPlan:
     Shared across Simulator instances — all fields are read-only by contract.
     ``plus_fetch`` (LTRF+ only) maps interval id -> (live fetch set, serial
     bank rounds) so the liveness-trimmed refetch cost is computed once per
-    interval instead of once per prefetch event.
+    interval instead of once per prefetch event.  ``instr_banks`` maps
+    ``id(instruction)`` (instructions of ``prog`` — the plan's own, possibly
+    renumbered, numbering) -> (source bank vector, dest bank vector) so the
+    simulator's bank-arbitration stage never recomputes ``bank_of`` per
+    issue.
     """
     prog: Program
     block_interval: dict[str, int]
@@ -134,26 +144,41 @@ class CompiledPlan:
     live_sets: dict[int, frozenset[int]] = field(default_factory=dict)
     plus_fetch: dict[int, tuple[frozenset[int], int]] = field(default_factory=dict)
     order_index: dict[str, int] = field(default_factory=dict)
+    instr_banks: dict[int, tuple[tuple[int, ...], tuple[int, ...]]] = \
+        field(default_factory=dict)
 
 
 def _finish(prog: Program, block_interval, pf_ops, live_sets=None,
-            plus_fetch=None) -> CompiledPlan:
+            plus_fetch=None, num_banks: int = 16) -> CompiledPlan:
+    banks: dict[int, tuple[tuple[int, ...], tuple[int, ...]]] = {}
+    for _, _, ins in prog.instructions():
+        banks[id(ins)] = (
+            tuple(bank_of(r, num_banks) for r in ins.srcs),
+            tuple(bank_of(r, num_banks) for r in ins.dsts),
+        )
     return CompiledPlan(
         prog=prog, block_interval=block_interval, pf_ops=pf_ops,
         live_sets=live_sets or {}, plus_fetch=plus_fetch or {},
         order_index={l: i for i, l in enumerate(prog.order)},
+        instr_banks=banks,
     )
 
 
 def compile_for_sim(prog: Program, design: str, interval_cap: int,
-                    num_banks: int) -> CompiledPlan:
+                    num_banks: int, renumber: str = "icg") -> CompiledPlan:
     """The simulator's compile step, memoized per (program, design family).
 
     Mirrors the per-design pipeline the paper evaluates: SHRF uses
     strand-bounded intervals, LTRF/LTRF+ plain register-intervals, LTRF_conf
     adds register renumbering, and the non-cached designs need no analysis.
+    ``renumber`` is the §4 ablation axis: ``"identity"`` makes LTRF_conf skip
+    the ICG coloring pass and keep the original register numbers (the knob
+    is a no-op for every other design, and is normalized out of the cache
+    key for them).
     """
-    key = (program_fingerprint(prog), design, interval_cap, num_banks)
+    eff_renumber = renumber if design == "LTRF_conf" else "icg"
+    key = (PLAN_REV, program_fingerprint(prog), design, interval_cap,
+           num_banks, eff_renumber)
     plan = _SIM_PLANS.get(key)
     if plan is not None:
         _STATS["hits"] += 1
@@ -161,13 +186,13 @@ def compile_for_sim(prog: Program, design: str, interval_cap: int,
     _STATS["misses"] += 1
 
     if design in ("BL", "RFC", "Ideal"):
-        plan = _finish(prog, {}, {})
+        plan = _finish(prog, {}, {}, num_banks=num_banks)
     else:
         if design == "SHRF":
             an = cached_intervals(prog, interval_cap, strand_mode=True)
-        elif design == "LTRF_conf":
+        elif design == "LTRF_conf" and eff_renumber == "icg":
             an = cached_renumber(prog, interval_cap, num_banks).analysis
-        else:  # LTRF, LTRF_plus
+        else:  # LTRF, LTRF_plus, LTRF_conf with identity numbering
             an = cached_intervals(prog, interval_cap)
         ops = cached_prefetch_ops(an, num_banks)
         live_sets: dict[int, frozenset[int]] = {}
@@ -187,7 +212,7 @@ def compile_for_sim(prog: Program, design: str, interval_cap: int,
                 rounds = max(occ) if any(occ) else 1
                 plus_fetch[iv.iid] = (live, rounds)
         plan = _finish(an.prog, dict(an.block_interval), ops,
-                       live_sets, plus_fetch)
+                       live_sets, plus_fetch, num_banks=num_banks)
     _put(_SIM_PLANS, key, plan)
     return plan
 

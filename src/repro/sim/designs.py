@@ -47,12 +47,17 @@ def design_config(
     num_sms: int = 1,
     scheduler: str = "two_level",
     mem_partitions: int = 0,
+    bank_model: str = "none",
+    renumber: str = "icg",
 ) -> SimConfig:
     """One design point.  GPU-scale knobs: ``num_sms`` > 1 (run the config
     through `repro.sim.gpu.simulate_gpu`; ``num_warps`` is then the kernel's
     whole-GPU warp count), ``scheduler`` picks the warp-scheduler policy,
     ``mem_partitions`` sizes the shared DRAM-partition model (0 = one per
-    SM, i.e. uncontended fair share)."""
+    SM, i.e. uncontended fair share).  Bank-level knobs:
+    ``bank_model="arbitrated"`` turns on same-cycle bank arbitration for
+    operand reads/writebacks, ``renumber="identity"`` makes LTRF_conf skip
+    the ICG renumbering pass (the §4.3 ablation axis)."""
     t = TABLE2[table2_config]
     size = rf_size_kb if rf_size_kb is not None else BASE_RF_KB * t["cap_mult"]
     mult = mrf_latency_mult if mrf_latency_mult is not None else t["lat_mult"]
@@ -69,18 +74,22 @@ def design_config(
         num_sms=num_sms,
         scheduler=scheduler,
         mem_partitions=mem_partitions,
+        bank_model=bank_model,
+        renumber=renumber,
     )
 
 
 def baseline_config(num_warps: int = 64, num_sms: int = 1,
-                    mem_partitions: int = 0) -> SimConfig:
+                    mem_partitions: int = 0,
+                    bank_model: str = "none") -> SimConfig:
     """§6 normalization point: config #1 + the 16KB RFC space, no cache, 1x.
 
     At GPU scale the baseline keeps the default ``two_level`` scheduler
     (identical to ``lrr`` for the uncached BL design)."""
     return SimConfig(design="BL", mrf_latency_mult=1.0, rf_size_kb=BASE_RF_KB,
                      add_rfc_to_main=True, num_warps=num_warps,
-                     num_sms=num_sms, mem_partitions=mem_partitions)
+                     num_sms=num_sms, mem_partitions=mem_partitions,
+                     bank_model=bank_model)
 
 
 def run(workload: Workload, cfg: SimConfig) -> SimResult:

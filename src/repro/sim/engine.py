@@ -18,7 +18,13 @@ structures the paper evaluates:
   (serial bank rounds x MRF bank latency + crossbar transfer) on one of a
   small number of prefetch slots, while other active warps keep issuing;
 * an L1 model (hit: short latency, no deactivation; miss: long latency,
-  deactivation) with deterministic per-access jitter.
+  deactivation) with deterministic per-access jitter;
+* an optional **bank-arbitration stage** (``SimConfig.bank_model``):
+  operand reads and writebacks hitting the same register bank in the same
+  cycle serialize, making the §4.3 renumbering ablation measurable end to
+  end (``SimConfig.renumber`` switches LTRF_conf between ICG coloring and
+  identity numbering).  ``bank_model="none"`` (default) stays bit-identical
+  to the frozen golden engine.
 
 The model is event-driven (idle cycles are skipped), deterministic, and
 counts MRF/RFC traffic so both performance (IPC) and the paper's power-proxy
@@ -46,7 +52,8 @@ DESIGNS = ("BL", "RFC", "SHRF", "LTRF", "LTRF_conf", "LTRF_plus", "Ideal")
 # Bump whenever SimResult counters intentionally change: it keys the on-disk
 # sim cache (benchmarks.orchestrator), so stale artifacts never replay across
 # engine-behavior revisions.
-ENGINE_REV = 1
+# rev 2: bank_model/renumber config axes + bank-conflict counters.
+ENGINE_REV = 2
 
 # Designs with a software-managed register cache (two-level scheduling).
 _CACHED_DESIGNS = frozenset({"LTRF", "LTRF_conf", "LTRF_plus", "SHRF"})
@@ -59,6 +66,23 @@ _EDGE_PREFETCH = frozenset({"LTRF", "LTRF_conf", "SHRF"})
 #   gto       - greedy-then-oldest over all resident warps, no deactivation
 #   lrr       - loose round-robin over all resident warps, no deactivation
 SCHEDULERS = ("two_level", "gto", "lrr")
+
+# Register-file bank-arbitration models (``SimConfig.bank_model``):
+#   none       - banks only serialize interval prefetches (the seed behavior;
+#                bit-identical to the frozen golden engine)
+#   arbitrated - operand reads and writebacks that hit the same bank in the
+#                same cycle serialize too (§4.3); extra rounds are charged at
+#                the design's read/write target latency and counted in
+#                SimResult.bank_conflicts / bank_conflict_cycles.  The Ideal
+#                design is exempt (it is the no-structural-limits bound).
+BANK_MODELS = ("none", "arbitrated")
+
+# Renumbering modes (``SimConfig.renumber``) — the §4 ablation axis:
+#   icg      - the paper's pipeline: ICG coloring + bank-aware renumbering
+#              (only LTRF_conf renumbers; the golden engine implements this)
+#   identity - skip the coloring pass: LTRF_conf keeps the original register
+#              numbers, exposing the bank conflicts renumbering would remove
+RENUMBER_MODES = ("icg", "identity")
 
 
 @dataclass(frozen=True)
@@ -88,6 +112,8 @@ class SimConfig:
     num_sms: int = 1               # SMs on the chip; >1 via repro.sim.gpu
     mem_partitions: int = 0        # DRAM partitions feeding the SMs
                                    # (0 = one per SM, i.e. uncontended)
+    bank_model: str = "none"       # RF bank arbitration (BANK_MODELS)
+    renumber: str = "icg"          # renumbering ablation axis (RENUMBER_MODES)
 
     @property
     def mrf_cycles(self) -> float:
@@ -112,6 +138,8 @@ class SimResult:
     prefetch_cycles: int = 0
     writeback_regs: int = 0
     activations: int = 0
+    bank_conflicts: int = 0        # extra serialization rounds (arbitrated)
+    bank_conflict_cycles: int = 0  # latency cycles those rounds added
 
     @property
     def ipc(self) -> float:
@@ -120,6 +148,11 @@ class SimResult:
     @property
     def hit_rate(self) -> float:
         return self.rfc_hits / max(self.rfc_accesses, 1)
+
+    @property
+    def bank_conflict_rate(self) -> float:
+        """Extra bank-serialization rounds per retired instruction."""
+        return self.bank_conflicts / max(self.instructions, 1)
 
 
 ACTIVE, INACTIVE_READY, INACTIVE_WAIT, PREFETCH, DONE = range(5)
@@ -160,10 +193,18 @@ class Simulator:
         if cfg.scheduler not in SCHEDULERS:
             raise ValueError(
                 f"unknown scheduler {cfg.scheduler!r}; one of {SCHEDULERS}")
+        if cfg.bank_model not in BANK_MODELS:
+            raise ValueError(
+                f"unknown bank_model {cfg.bank_model!r}; one of {BANK_MODELS}")
+        if cfg.renumber not in RENUMBER_MODES:
+            raise ValueError(
+                f"unknown renumber mode {cfg.renumber!r}; "
+                f"one of {RENUMBER_MODES}")
         self.cfg = cfg
         self.w = workload
         plan = compile_for_sim(workload.program, cfg.design,
-                               cfg.interval_cap, cfg.num_banks)
+                               cfg.interval_cap, cfg.num_banks,
+                               renumber=cfg.renumber)
         self.prog: Program = plan.prog
         self.block_interval = plan.block_interval
         self.pf_ops = plan.pf_ops
@@ -198,6 +239,17 @@ class Simulator:
         self._stall_pure = True
         self._sched = cfg.scheduler
         self._gto_last = -1
+        # Bank arbitration (bank_model="arbitrated"): per-cycle read/write
+        # port usage per bank.  Ideal is exempt — it is the design with no
+        # structural register-file limits, the paper's upper bound.
+        self._arb = cfg.bank_model == "arbitrated" and cfg.design != "Ideal"
+        self._instr_banks = plan.instr_banks
+        self._read_from_mrf = False     # set per issue by _operand_latency
+        self._arb_wb_unit = cfg.base_rf_cycles if cfg.design == "BL" \
+            else cfg.rfc_cycles
+        self._bank_cycle = -1
+        self._rd_use: list[int] = []
+        self._wr_use: list[int] = []
 
     # ------------------------------------------------------------------ static
     def _occupancy(self) -> int:
@@ -375,6 +427,13 @@ class Simulator:
                 fetch, rounds = ent
                 if not fetch:
                     return
+        if self._arb and rounds > 1:
+            # prefetch bank serialization is already charged in the latency
+            # below (it predates the arbitration model); under the arbitrated
+            # model it is also *counted*, so the renumbering ablation sees
+            # every conflict source in one pair of counters.
+            self.result.bank_conflicts += rounds - 1
+            self.result.bank_conflict_cycles += int((rounds - 1) * self._mrf_cyc)
         lat = rounds * self._mrf_cyc \
             + len(fetch) / cfg.xbar_regs_per_cycle
         pf = self._pf_free
@@ -556,6 +615,7 @@ class Simulator:
                 self._stall_pure = n_acc == 0
                 return None
             res.mrf_accesses += n_acc
+            self._read_from_mrf = True
             return self._mrf_cyc
         if design == "RFC":
             n_acc, regs = self._instr_meta[id(ins)]
@@ -586,6 +646,7 @@ class Simulator:
                     rfc_lru[key] = None
                     if len(rfc_lru) > entries:
                         rfc_lru.popitem(last=False)
+            self._read_from_mrf = misses > 0
             return self._mrf_cyc if misses else self._rfc_cyc
         # LTRF-family: every in-interval access hits the register cache
         if not self._grab_collector(cycle):
@@ -594,7 +655,38 @@ class Simulator:
         n_acc = self._instr_meta[id(ins)][0]
         res.rfc_accesses += n_acc
         res.rfc_hits += n_acc
+        self._read_from_mrf = False
         return self._rfc_cyc
+
+    def _bank_arbitrate(self, ins: Instr, cycle: int) -> tuple[int, int]:
+        """(extra read rounds, extra writeback rounds) from same-cycle
+        same-bank contention, under ``bank_model="arbitrated"``.
+
+        Per-cycle per-bank access counters model each bank's single read and
+        single write port: the k-th access to a bank within a cycle waits k
+        extra serialization rounds, and an instruction is held up by its
+        worst operand (ports pipeline across *different* banks for free)."""
+        if cycle != self._bank_cycle:
+            self._bank_cycle = cycle
+            n = self.cfg.num_banks
+            self._rd_use = [0] * n
+            self._wr_use = [0] * n
+        src_banks, dst_banks = self._instr_banks[id(ins)]
+        rd_extra = 0
+        use = self._rd_use
+        for b in src_banks:
+            pos = use[b]
+            use[b] = pos + 1
+            if pos > rd_extra:
+                rd_extra = pos
+        wr_extra = 0
+        use = self._wr_use
+        for b in dst_banks:
+            pos = use[b]
+            use[b] = pos + 1
+            if pos > wr_extra:
+                wr_extra = pos
+        return rd_extra, wr_extra
 
     def _mem_latency(self, wp: _Warp, cycle: int) -> tuple[int, bool]:
         """(latency, is_l1_miss) with deterministic jitter + DRAM queuing.
@@ -644,6 +736,23 @@ class Simulator:
         wp.ver += 1
         done_at = cycle + read_lat
         wlat = self._wlat
+        if self._arb:
+            rd_extra, wr_extra = self._bank_arbitrate(ins, cycle)
+            res = self.result
+            if rd_extra:
+                # extra rounds re-access the bank at its nominal cell latency:
+                # the design's read target (MRF at base_rf_cycles, RFC/LTRF
+                # register cache at rfc_cycles)
+                pen = rd_extra * (cfg.base_rf_cycles if self._read_from_mrf
+                                  else cfg.rfc_cycles)
+                done_at += pen
+                res.bank_conflicts += rd_extra
+                res.bank_conflict_cycles += pen
+            if wr_extra:
+                pen = wr_extra * self._arb_wb_unit
+                wlat = wlat + pen
+                res.bank_conflicts += wr_extra
+                res.bank_conflict_cycles += pen
         if ins.op == "set":
             done_at += cfg.alu_cycles
             if ins.pdst is not None:

@@ -145,6 +145,8 @@ class GpuResult:
     prefetch_cycles: int = 0
     writeback_regs: int = 0
     activations: int = 0
+    bank_conflicts: int = 0
+    bank_conflict_cycles: int = 0
     per_sm: tuple[SimResult, ...] = ()
 
     @property
@@ -156,6 +158,11 @@ class GpuResult:
     @property
     def hit_rate(self) -> float:
         return self.rfc_hits / max(self.rfc_accesses, 1)
+
+    @property
+    def bank_conflict_rate(self) -> float:
+        """Extra bank-serialization rounds per retired instruction (chip)."""
+        return self.bank_conflicts / max(self.instructions, 1)
 
     @property
     def sm_imbalance(self) -> float:
@@ -182,6 +189,8 @@ def aggregate(cfg: SimConfig, results: list[SimResult],
         prefetch_cycles=sum(r.prefetch_cycles for r in results),
         writeback_regs=sum(r.writeback_regs for r in results),
         activations=sum(r.activations for r in results),
+        bank_conflicts=sum(r.bank_conflicts for r in results),
+        bank_conflict_cycles=sum(r.bank_conflict_cycles for r in results),
         per_sm=tuple(results),
     )
 

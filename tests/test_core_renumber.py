@@ -128,6 +128,46 @@ def test_bank_of_schemes():
     assert bank_of(9, 4, "grouped", 2) == 0  # wraps
 
 
+def test_bank_of_unknown_scheme_raises():
+    with pytest.raises(ValueError):
+        bank_of(0, 4, "hashed")
+
+
+def test_bank_of_grouped_edge_cases():
+    """regs_per_bank x num_banks interplay for the grouped scheme."""
+    # regs_per_bank=1 degenerates to the interleaved mapping
+    for r in range(32):
+        assert bank_of(r, 8, "grouped", 1) == bank_of(r, 8, "interleaved")
+    # a full group lands in one bank, the next group in the next bank
+    assert [bank_of(r, 4, "grouped", 3) for r in range(6)] == [0, 0, 0, 1, 1, 1]
+    # wrap-around period is num_banks * regs_per_bank
+    for r in range(64):
+        assert bank_of(r, 4, "grouped", 2) == bank_of(r + 8, 4, "grouped", 2)
+        assert bank_of(r, 4, "grouped", 3) == bank_of(r + 12, 4, "grouped", 3)
+    # regs_per_bank larger than num_banks still cycles through every bank
+    banks = {bank_of(r, 4, "grouped", 7) for r in range(4 * 7)}
+    assert banks == {0, 1, 2, 3}
+    # results always land inside [0, num_banks)
+    for r in range(200):
+        for nb in (1, 2, 4, 16):
+            for rpb in (1, 2, 3, 7):
+                assert 0 <= bank_of(r, nb, "grouped", rpb) < nb
+
+
+def test_bank_regs_generator_inverts_bank_of():
+    """Every register `_bank_regs` yields for a bank maps back to that bank
+    under `bank_of` — the renumberer's allocation and the prefetch unit's
+    accounting can never disagree."""
+    from itertools import islice
+    from repro.core.renumber import _bank_regs
+    for scheme, rpb in (("interleaved", 2), ("grouped", 2), ("grouped", 3)):
+        for nb in (2, 4, 8):
+            for bank in range(nb):
+                for reg in islice(_bank_regs(bank, nb, scheme, rpb), 12):
+                    assert bank_of(reg, nb, scheme, rpb) == bank, \
+                        (scheme, rpb, nb, bank, reg)
+
+
 @pytest.mark.parametrize("name", sorted(WORKLOADS))
 def test_renumbering_never_increases_max_conflicts(name):
     w = WORKLOADS[name]
@@ -136,6 +176,21 @@ def test_renumbering_never_increases_max_conflicts(name):
     rr = renumber_registers(an, num_banks=16)
     post = prefetch_schedule(rr.analysis, num_banks=16)
     assert max(o.conflicts for o in post) <= max(o.conflicts for o in pre)
+
+
+@pytest.mark.parametrize("name", sorted(WORKLOADS))
+def test_icg_rounds_le_identity_rounds(name):
+    """ISSUE-4 satellite property: total serial prefetch bank rounds with
+    ICG coloring never exceed the rounds under identity numbering (the
+    renumbering pass is advisory — it keeps the original code when the
+    coloring heuristic would lose)."""
+    w = WORKLOADS[name]
+    an = form_register_intervals(w.program, n_cap=16)
+    identity = prefetch_schedule(an, num_banks=16)          # original numbers
+    rr = renumber_registers(an, num_banks=16)
+    icg = prefetch_schedule(rr.analysis, num_banks=16)
+    assert sum(o.serial_rounds for o in icg) <= \
+        sum(o.serial_rounds for o in identity), name
 
 
 def test_suite_conflict_free_fraction_improves():

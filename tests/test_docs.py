@@ -1,0 +1,117 @@
+"""Doc-consistency checks: the docs/ tree cannot silently go stale.
+
+* every `SimConfig` field and result counter must be documented in
+  docs/configuration.md (new knobs cannot land undocumented);
+* every `designs.py` knob — `design_config` parameter, design name,
+  scheduler/bank-model/renumber mode, Table-2 memory technology — must be
+  documented;
+* every relative markdown link in README.md and docs/ must resolve (this is
+  the CI "markdown link check" — no network, external URLs are skipped).
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+import pathlib
+import re
+
+import pytest
+
+from repro.sim import (
+    BANK_MODELS, DESIGNS, RENUMBER_MODES, SCHEDULERS, SimConfig, SimResult,
+)
+from repro.sim.designs import TABLE2, baseline_config, design_config
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DOCS = ROOT / "docs"
+CONFIG_DOC = DOCS / "configuration.md"
+
+MARKDOWN_FILES = sorted([ROOT / "README.md", *DOCS.glob("*.md")])
+
+
+def test_docs_tree_exists():
+    for name in ("architecture.md", "simulator.md", "configuration.md"):
+        assert (DOCS / name).is_file(), f"docs/{name} missing"
+
+
+def test_every_simconfig_field_documented():
+    doc = CONFIG_DOC.read_text()
+    missing = [f.name for f in dataclasses.fields(SimConfig)
+               if f"`{f.name}`" not in doc]
+    assert not missing, (
+        f"SimConfig fields missing from docs/configuration.md: {missing} "
+        "(document new knobs before landing them)")
+
+
+def test_every_simresult_counter_documented():
+    doc = CONFIG_DOC.read_text()
+    missing = [f.name for f in dataclasses.fields(SimResult)
+               if f.name not in ("design", "workload") and f"`{f.name}`" not in doc]
+    assert not missing, \
+        f"SimResult counters missing from docs/configuration.md: {missing}"
+
+
+def test_every_design_config_knob_documented():
+    doc = CONFIG_DOC.read_text()
+    for fn in (design_config, baseline_config):
+        params = [p for p in inspect.signature(fn).parameters if p != "design"]
+        missing = [p for p in params if f"`{p}`" not in doc]
+        assert not missing, \
+            f"{fn.__name__} parameters missing from configuration.md: {missing}"
+
+
+def test_design_scheduler_and_mode_names_documented():
+    doc = CONFIG_DOC.read_text()
+    for name in (*DESIGNS, *SCHEDULERS, *BANK_MODELS, *RENUMBER_MODES):
+        assert f"`{name}`" in doc, f"{name!r} not named in configuration.md"
+
+
+def test_memtech_table_documented():
+    """The Table-2 memory-technology table (designs.TABLE2) is in the doc:
+    every config id with its capacity and latency multipliers."""
+    doc = CONFIG_DOC.read_text()
+    for tech in ("HP-SRAM", "LSTP", "TFET", "DWM"):
+        assert tech in doc, f"memory technology {tech} undocumented"
+    for tc, t in TABLE2.items():
+        row = re.search(rf"^\|\s*{tc}\s*\|.*$", doc, re.M)
+        assert row, f"Table-2 config #{tc} has no row in configuration.md"
+        assert f"{t['lat_mult']}x" in row.group(0), \
+            f"Table-2 config #{tc} row does not show {t['lat_mult']}x latency"
+
+
+# ------------------------------------------------------------- link checking
+
+_LINK = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
+_CODE_FENCE = re.compile(r"```.*?```", re.S)
+
+
+def _relative_links(md: pathlib.Path):
+    text = _CODE_FENCE.sub("", md.read_text())
+    for target in _LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        yield target
+
+
+@pytest.mark.parametrize("md", MARKDOWN_FILES, ids=lambda p: p.name)
+def test_markdown_relative_links_resolve(md):
+    for target in _relative_links(md):
+        path_part, _, anchor = target.partition("#")
+        if not path_part:  # pure in-page anchor
+            dest = md
+        else:
+            dest = (md.parent / path_part).resolve()
+            assert dest.exists(), f"{md.name}: broken link -> {target}"
+        if anchor and dest.suffix == ".md":
+            # GitHub-style anchor: a heading must slug to it
+            headings = re.findall(r"^#+\s+(.*)$", dest.read_text(), re.M)
+            slugs = {re.sub(r"[^\w\- ]", "", h).strip().lower()
+                     .replace(" ", "-") for h in headings}
+            assert anchor.lower() in slugs, \
+                f"{md.name}: dead anchor -> {target}"
+
+
+def test_docs_are_linked_from_readme():
+    readme = (ROOT / "README.md").read_text()
+    for name in ("architecture.md", "simulator.md", "configuration.md"):
+        assert f"docs/{name}" in readme, f"README does not index docs/{name}"

@@ -1,0 +1,195 @@
+"""Bank-level register-file arbitration + renumbering ablation (ISSUE 4).
+
+Three layers:
+
+* **no-op guarantee**: ``bank_model="none"`` (the default) never touches the
+  new counters and stays bit-identical to the frozen golden engine — the
+  hard invariant every engine change must respect;
+* **determinism pins**: exact arbitrated counters for the paper's Listing-1
+  program, so the arbitration model itself cannot drift silently;
+* **the §4.3 ablation property**: under ``bank_model="arbitrated"``,
+  LTRF with ICG renumbering accumulates no more bank-conflict cycles than
+  the same design with identity numbering on every synthetic workload,
+  strictly fewer in aggregate, and never loses IPC — the end-to-end claim
+  the renumbering pass exists to deliver.
+"""
+from dataclasses import replace
+
+import pytest
+
+from repro.sim import (
+    BANK_MODELS, DESIGNS, RENUMBER_MODES, SimConfig, design_config, simulate,
+    simulate_gpu,
+)
+from repro.sim.golden import golden_simulate
+from repro.workloads import WORKLOADS, workload_names
+from repro.workloads.suite import Workload, listing1_program
+
+
+def listing1_workload() -> Workload:
+    return Workload(name="listing1", program=listing1_program(),
+                    trips={"L1": 100}, register_sensitive=False,
+                    regs_per_thread=8, suite="paper")
+
+
+# ------------------------------------------------------------ config plumbing
+
+def test_bank_model_none_is_default():
+    cfg = SimConfig()
+    assert cfg.bank_model == "none"
+    assert cfg.renumber == "icg"
+    assert "none" in BANK_MODELS and "arbitrated" in BANK_MODELS
+    assert RENUMBER_MODES == ("icg", "identity")
+
+
+def test_unknown_bank_model_and_renumber_raise():
+    w = WORKLOADS["bfs"]
+    with pytest.raises(ValueError):
+        simulate(w, SimConfig(bank_model="banked3000", num_warps=4))
+    with pytest.raises(ValueError):
+        simulate(w, SimConfig(renumber="rainbow", num_warps=4))
+
+
+# ----------------------------------------------------------- no-op guarantee
+
+@pytest.mark.parametrize("design", DESIGNS)
+def test_bank_model_none_zero_counters_and_golden_identical(design):
+    """The default model leaves the new counters untouched and remains
+    bit-identical to the frozen seed engine."""
+    w = WORKLOADS["srad"]
+    cfg = design_config(design, table2_config=7, num_warps=12,
+                        bank_model="none")
+    r = simulate(w, cfg)
+    assert r.bank_conflicts == 0 and r.bank_conflict_cycles == 0
+    assert r == golden_simulate(w, cfg), design
+
+
+def test_arbitrated_same_instructions_as_none():
+    """Arbitration adds latency, never work: the retired dynamic instruction
+    stream is identical with and without the model."""
+    for name in ("srad", "btree", "sgemm"):
+        w = WORKLOADS[name]
+        for design in ("BL", "RFC", "LTRF", "LTRF_conf"):
+            cfg = design_config(design, table2_config=7, num_warps=8)
+            arb = simulate(w, replace(cfg, bank_model="arbitrated"))
+            none = simulate(w, cfg)
+            assert arb.instructions == none.instructions, (name, design)
+            assert arb.resident_warps == none.resident_warps
+
+
+def test_ideal_design_exempt_from_arbitration():
+    w = WORKLOADS["srad"]
+    cfg = design_config("Ideal", table2_config=7, num_warps=12,
+                        bank_model="arbitrated")
+    r = simulate(w, cfg)
+    assert r.bank_conflicts == 0 and r.bank_conflict_cycles == 0
+    assert r == simulate(w, replace(cfg, bank_model="none"))
+
+
+# ---------------------------------------------------------- determinism pins
+
+# Exact (cycles, bank_conflicts, bank_conflict_cycles) for Listing 1 under
+# bank_model="arbitrated" at Table-2 config #7, 16 warps.
+LISTING1_ARBITRATED = {
+    "BL":        (807, 15, 60),
+    "RFC":       (587, 16, 16),
+    "SHRF":      (777, 41, 41),
+    "LTRF":      (628, 9, 9),
+    "LTRF_conf": (628, 9, 9),
+    "LTRF_plus": (550, 9, 9),
+    "Ideal":     (577, 0, 0),
+}
+
+
+@pytest.mark.parametrize("design", DESIGNS)
+def test_listing1_arbitrated_counters_pinned(design):
+    w = listing1_workload()
+    cfg = design_config(design, table2_config=7, num_warps=16,
+                        bank_model="arbitrated")
+    r = simulate(w, cfg)
+    got = (r.cycles, r.bank_conflicts, r.bank_conflict_cycles)
+    assert got == LISTING1_ARBITRATED[design], (design, got)
+    # deterministic across instances
+    assert simulate(w, cfg) == r
+
+
+# -------------------------------------------------------- the §4.3 ablation
+
+def _ablation_pair(name: str, table2_config: int = 7):
+    w = WORKLOADS[name]
+    icg = simulate(w, design_config("LTRF_conf", table2_config=table2_config,
+                                    bank_model="arbitrated"))
+    ident = simulate(w, design_config("LTRF_conf",
+                                      table2_config=table2_config,
+                                      bank_model="arbitrated",
+                                      renumber="identity"))
+    return icg, ident
+
+
+@pytest.mark.parametrize("name", sorted(workload_names()))
+def test_icg_never_worse_than_identity(name):
+    """Per workload: ICG renumbering accumulates no more bank-conflict
+    cycles than identity numbering and never loses IPC."""
+    icg, ident = _ablation_pair(name)
+    assert icg.bank_conflict_cycles <= ident.bank_conflict_cycles, name
+    assert icg.ipc >= ident.ipc, name
+
+
+def test_icg_strictly_fewer_conflict_cycles_in_aggregate():
+    """ISSUE-4 acceptance: strictly fewer bank-conflict cycles across the
+    tracked sweep (both Table-2 design points)."""
+    for tc in (6, 7):
+        tot_icg = tot_ident = 0
+        for name in workload_names():
+            icg, ident = _ablation_pair(name, table2_config=tc)
+            tot_icg += icg.bank_conflict_cycles
+            tot_ident += ident.bank_conflict_cycles
+        assert tot_icg < tot_ident, tc
+
+
+def test_identity_renumber_matches_plain_ltrf_plan():
+    """LTRF_conf with identity numbering compiles to LTRF's plan: same
+    program, same prefetch ops (the knob only ablates the coloring pass)."""
+    from repro.sim import Simulator
+    w = WORKLOADS["srad"]
+    a = Simulator(design_config("LTRF_conf", table2_config=7,
+                                renumber="identity"), w)
+    b = Simulator(design_config("LTRF", table2_config=7), w)
+    assert a.prog is b.prog
+    assert a.pf_ops is b.pf_ops
+
+
+def test_bank_conflict_rate_property():
+    w = WORKLOADS["srad"]
+    r = simulate(w, design_config("BL", table2_config=7, num_warps=8,
+                                  bank_model="arbitrated"))
+    assert r.bank_conflicts > 0
+    assert r.bank_conflict_rate == r.bank_conflicts / r.instructions
+
+
+# ----------------------------------------------------------------- GPU scale
+
+def test_gpu_aggregates_bank_counters():
+    """Per-SM bank-conflict counters sum into the GpuResult (ISSUE 4:
+    sim/gpu.py aggregates the new counters)."""
+    w = WORKLOADS["srad"]
+    cfg = design_config("LTRF_conf", table2_config=7, num_warps=16,
+                        num_sms=2, bank_model="arbitrated")
+    g = simulate_gpu(w, cfg)
+    assert g.bank_conflicts == sum(r.bank_conflicts for r in g.per_sm)
+    assert g.bank_conflict_cycles == \
+        sum(r.bank_conflict_cycles for r in g.per_sm)
+    assert g.bank_conflicts > 0
+    assert g.bank_conflict_rate == g.bank_conflicts / g.instructions
+
+
+def test_gpu_num_sms1_arbitrated_matches_single_sm():
+    """The GPU dispatcher passes the bank knobs through unchanged."""
+    w = WORKLOADS["btree"]
+    cfg = design_config("LTRF_conf", table2_config=7, num_warps=16,
+                        bank_model="arbitrated", renumber="identity")
+    g = simulate_gpu(w, cfg)
+    r = simulate(w, cfg)
+    assert g.per_sm == (r,)
+    assert (g.bank_conflicts, g.bank_conflict_cycles) == \
+        (r.bank_conflicts, r.bank_conflict_cycles)

@@ -190,6 +190,46 @@ def test_fuzz_schedulers_deterministic_same_work(seed):
         assert r.resident_warps == ref.resident_warps
 
 
+# ------------------------------------------ bank-model fuzzed invariants
+
+@pytest.mark.parametrize("seed", range(10))
+def test_fuzz_bank_model_none_noop_and_arbitrated_invariants(seed):
+    """ISSUE 4: ``bank_model="none"`` must be bit-identical to the golden
+    oracle with zero conflict counters; the arbitrated model is
+    deterministic, retires the same dynamic instruction stream, and only
+    ever *adds* latency bookkeeping."""
+    w = random_workload(300 + seed)
+    base = random_config(300 + seed)  # bank_model defaults to "none"
+    none = simulate(w, base)
+    assert none == golden_simulate(w, base), seed
+    assert none.bank_conflicts == 0 and none.bank_conflict_cycles == 0
+    arb_cfg = replace(base, bank_model="arbitrated")
+    arb = simulate(w, arb_cfg)
+    assert arb == simulate(w, arb_cfg), seed
+    assert arb.instructions == none.instructions, seed
+    assert arb.bank_conflict_cycles >= arb.bank_conflicts >= 0
+    if base.design == "Ideal":
+        assert arb == none  # Ideal is exempt from arbitration
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_fuzz_identity_renumber_equals_plain_ltrf(seed):
+    """LTRF_conf with ``renumber="identity"`` ablates the coloring pass and
+    must therefore be bit-identical to plain LTRF under any bank model."""
+    w = random_workload(400 + seed)
+    base = random_config(400 + seed)
+    for bank_model in ("none", "arbitrated"):
+        conf = replace(base, design="LTRF_conf", renumber="identity",
+                       bank_model=bank_model)
+        ltrf = replace(base, design="LTRF", bank_model=bank_model)
+        a, b = simulate(w, conf), simulate(w, ltrf)
+        # designs differ only in the ablated pass; counters must agree
+        assert (a.cycles, a.instructions, a.mrf_accesses, a.rfc_hits,
+                a.bank_conflicts, a.bank_conflict_cycles) == \
+               (b.cycles, b.instructions, b.mrf_accesses, b.rfc_hits,
+                b.bank_conflicts, b.bank_conflict_cycles), (seed, bank_model)
+
+
 @pytest.mark.parametrize("seed", range(8))
 def test_fuzz_gpu_aggregation_identities(seed):
     """Multi-SM runs: instructions sum over SMs, cycles are the slowest SM,
@@ -199,10 +239,14 @@ def test_fuzz_gpu_aggregation_identities(seed):
     cfg = replace(random_config(200 + seed),
                   num_sms=rng.randint(2, 4),
                   mem_partitions=rng.choice((0, 1, 2)),
-                  scheduler=rng.choice(("two_level", "gto", "lrr")))
+                  scheduler=rng.choice(("two_level", "gto", "lrr")),
+                  bank_model=rng.choice(("none", "arbitrated")))
     g = simulate_gpu(w, cfg)
     assert g.instructions == sum(r.instructions for r in g.per_sm)
     assert g.cycles == max(r.cycles for r in g.per_sm)
     assert g.mrf_accesses == sum(r.mrf_accesses for r in g.per_sm)
+    assert g.bank_conflicts == sum(r.bank_conflicts for r in g.per_sm)
+    assert g.bank_conflict_cycles == \
+        sum(r.bank_conflict_cycles for r in g.per_sm)
     assert len(g.per_sm) <= cfg.num_sms
     assert g == simulate_gpu(w, cfg)

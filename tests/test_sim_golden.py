@@ -122,6 +122,23 @@ def test_traced_matmul_counters_pinned(design):
     assert golden_simulate(w, cfg) == r
 
 
+def test_bank_model_none_bit_identical_to_golden():
+    """ISSUE 4 acceptance pin: the bank-arbitration knob at its default
+    ``bank_model="none"`` is a strict no-op — bit-identical to the frozen
+    golden oracle (which predates the knob), with zero conflict counters."""
+    from dataclasses import replace
+
+    for design in ("BL", "RFC", "LTRF", "LTRF_conf"):
+        for name in ("srad", "btree"):
+            w = WORKLOADS[name]
+            cfg = design_config(design, table2_config=7, num_warps=16)
+            explicit = replace(cfg, bank_model="none", renumber="icg")
+            r = simulate(w, explicit)
+            assert r == golden_simulate(w, cfg), (design, name)
+            assert r == simulate(w, cfg)
+            assert r.bank_conflicts == 0 and r.bank_conflict_cycles == 0
+
+
 def test_simulation_repeatable_across_instances():
     w = listing1_workload()
     cfg = SimConfig(design="LTRF_conf", num_warps=24, mrf_latency_mult=6.3)
