@@ -21,7 +21,13 @@ Likewise the §4.3 bank-arbitration/renumbering ablation
 (`benchmarks.sweep_subset.bank_sweep_jobs`) lands under ``bank_sweep`` —
 including the two acceptance verdicts (ICG renumbering strictly reduces
 aggregate bank-conflict cycles, and never loses IPC per workload) — and
-``--bank-smoke`` runs it standalone for CI.
+``--bank-smoke`` runs it standalone for CI.  The interval-formation
+ablation (`benchmarks.sweep_subset.interval_sweep_jobs`) lands under
+``interval_sweep`` — paper vs capacity vs fixed interval strategies across
+all designs on the high-register-pressure workloads, with the ISSUE-5
+acceptance verdicts (capacity strictly reduces aggregate prefetch-stall
+cycles on LTRF_conf, with no per-workload IPC regression) — and
+``--interval-smoke`` runs it standalone for CI.
 
 Usage::
 
@@ -30,6 +36,8 @@ Usage::
     python -m benchmarks.bench_sim --gpu-smoke  # GPU mini-sweep only (CI)
     python -m benchmarks.bench_sim --bank-smoke # bank/renumbering ablation
                                                 # only (CI)
+    python -m benchmarks.bench_sim --interval-smoke  # interval-strategy
+                                                # ablation only (CI)
     python -m benchmarks.bench_sim --suite traced   # sweep the lifted
                                                 # real kernels (untracked)
     python -m benchmarks.bench_sim --baseline   # re-measure the golden
@@ -46,7 +54,8 @@ import time
 
 from benchmarks.orchestrator import SimRunner, default_processes
 from benchmarks.sweep_subset import (
-    SWEEP_DESIGNS, bank_sweep_jobs, gpu_sweep_jobs, sweep_jobs,
+    INTERVAL_SWEEP_CAP, INTERVAL_VERDICT_DESIGN, SWEEP_DESIGNS,
+    bank_sweep_jobs, gpu_sweep_jobs, interval_sweep_jobs, sweep_jobs,
 )
 from repro.workloads import get_workload
 
@@ -162,6 +171,62 @@ def measure_bank_sweep(processes=None, suite: str | None = None) -> dict:
     }
 
 
+def measure_interval_sweep(processes=None, suite: str | None = None) -> dict:
+    """The interval-formation-strategy ablation (BENCH_sim.json's
+    ``interval_sweep`` section; CI's ``--interval-smoke`` step).
+
+    Runs paper/capacity/fixed interval formation across all 7 designs over
+    the high-register-pressure workloads at an oversized ``interval_cap``
+    and records per-config IPC + prefetch-stall counters, plus the ISSUE-5
+    acceptance verdicts computed on the paper's full compile pipeline
+    (LTRF_conf): the capacity strategy must show strictly fewer aggregate
+    prefetch-stall cycles than the paper strategy with no per-workload IPC
+    regression.  Also records that the knob is a no-op on the designs with
+    no interval prefetch (BL/RFC/Ideal) and on strand-bounded SHRF."""
+    runner = SimRunner(processes=processes, disk_cache=False)
+    jobs = interval_sweep_jobs(suite=suite)
+    t0 = time.time()
+    runner.prefill(jobs)
+    rows = []
+    for name, cfg in jobs:
+        res = runner.sim(name, cfg)
+        rows.append({"workload": name, "design": cfg.design,
+                     "strategy": cfg.interval_strategy,
+                     "ipc": round(res.ipc, 4),
+                     "prefetch_ops": res.prefetch_ops,
+                     "prefetch_stall_cycles": res.prefetch_stall_cycles,
+                     "mrf_accesses": res.mrf_accesses})
+    wall = time.time() - t0
+    vd = INTERVAL_VERDICT_DESIGN
+    paper = {r["workload"]: r for r in rows
+             if r["design"] == vd and r["strategy"] == "paper"}
+    capacity = {r["workload"]: r for r in rows
+                if r["design"] == vd and r["strategy"] == "capacity"}
+    paper_stalls = sum(r["prefetch_stall_cycles"] for r in paper.values())
+    capacity_stalls = sum(r["prefetch_stall_cycles"] for r in capacity.values())
+    per_wl: dict[tuple[str, str], set] = {}
+    for r in rows:
+        if r["design"] in ("BL", "RFC", "SHRF", "Ideal"):
+            per_wl.setdefault((r["design"], r["workload"]), set()).add(
+                (r["ipc"], r["prefetch_ops"], r["prefetch_stall_cycles"],
+                 r["mrf_accesses"]))
+    noop = all(len(v) == 1 for v in per_wl.values())
+    return {
+        "interval_cap": INTERVAL_SWEEP_CAP,
+        "verdict_design": vd,
+        "sims": len(jobs),
+        "wall_s": round(wall, 2),
+        "paper_stall_cycles": paper_stalls,
+        "capacity_stall_cycles": capacity_stalls,
+        "capacity_strictly_fewer_stall_cycles":
+            capacity_stalls < paper_stalls,
+        "capacity_no_ipc_regression_all_workloads": all(
+            capacity[n]["ipc"] >= paper[n]["ipc"] for n in paper),
+        "strategy_noop_on_uncached_designs": noop,
+        "results": rows,
+    }
+
+
 def measure_golden_serial(jobs) -> dict:
     from repro.sim.golden import golden_simulate
     t0 = time.time()
@@ -197,10 +262,12 @@ def run_bench(smoke: bool = False, processes: int | None = None,
     print(f"# sim cache: timing_run={cache['timing_run']} "
           f"replay={cache['replay']} all_hits={cache['replay_all_hits']}",
           file=sys.stderr)
-    if not smoke:  # CI runs the GPU/bank sweeps as their own smoke steps
+    if not smoke:  # CI runs the GPU/bank/interval sweeps as their own steps
         report["gpu_sweep"] = measure_gpu_sweep(processes=processes)
         report["bank_sweep"] = measure_bank_sweep(processes=processes,
                                                   suite=suite)
+        report["interval_sweep"] = measure_interval_sweep(processes=processes,
+                                                          suite=suite)
     tracked = not smoke and suite in (None, "synth")
     if tracked and BASELINE_PATH.exists():
         base = json.loads(BASELINE_PATH.read_text())
@@ -232,6 +299,9 @@ def main(argv=None) -> None:
     ap.add_argument("--bank-smoke", action="store_true",
                     help="run only the bank-arbitration/renumbering "
                          "ablation sweep (CI bank smoke)")
+    ap.add_argument("--interval-smoke", action="store_true",
+                    help="run only the interval-formation-strategy "
+                         "ablation sweep (CI interval smoke)")
     ap.add_argument("--procs", type=int, default=None)
     args = ap.parse_args(argv)
     if args.gpu_smoke:
@@ -240,6 +310,11 @@ def main(argv=None) -> None:
         return
     if args.bank_smoke:
         report = measure_bank_sweep(processes=args.procs, suite=args.suite)
+        print(json.dumps(report, indent=1))
+        return
+    if args.interval_smoke:
+        report = measure_interval_sweep(processes=args.procs,
+                                        suite=args.suite)
         print(json.dumps(report, indent=1))
         return
     if args.baseline:

@@ -236,6 +236,53 @@ def fig17_bank_ablation():
     return _cached("fig17_bank", run)
 
 
+def fig17_interval_strategy():
+    """Interval-formation-strategy ablation (the ISSUE-5 compile-pipeline axis).
+
+    Compares the paper's interval algorithm against the capacity-clamped
+    strategy (working sets bounded by the RFC's entries-per-warp) and naive
+    fixed-length intervals, on the paper's full compile pipeline
+    (LTRF_conf) at Table-2 config #7 with an oversized ``interval_cap`` so
+    the clamp is live.  Reports per-workload IPC normalized to the §6
+    baseline plus prefetch-stall cycles per kilo-instruction — the metric
+    the strategies shape — and a geomean summary row.  Runs over the
+    synthetic suite by default and the lifted real kernels with
+    ``--suite traced``."""
+    from benchmarks.sweep_subset import INTERVAL_SWEEP_CAP
+
+    STRATEGIES = (("paper", "LTRF"),
+                  ("capacity", "LTRF_capacity"),
+                  ("fixed:8", "LTRF_fixed8"))
+
+    def run():
+        WL = _workloads()
+
+        def cfg_for(strategy):
+            return design_config("LTRF_conf", table2_config=7,
+                                 interval_cap=INTERVAL_SWEEP_CAP,
+                                 interval_strategy=strategy)
+
+        _prefill([(n, baseline_config()) for n in WL]
+                 + [(n, cfg_for(s)) for n in WL for s, _ in STRATEGIES])
+        rows = []
+        gmeans = {tag: [] for _, tag in STRATEGIES}
+        for name, w in WL.items():
+            base = _sim(w, baseline_config()).ipc
+            row = {"workload": name}
+            for s, tag in STRATEGIES:
+                r = _sim(w, cfg_for(s))
+                row[f"{tag}_ipc"] = r.ipc / base
+                row[f"{tag}_stall_per_kinstr"] = \
+                    1000 * r.prefetch_stall_cycles / max(r.instructions, 1)
+                row[f"{tag}_prefetch_ops"] = r.prefetch_ops
+                gmeans[tag].append(r.ipc / base)
+            rows.append(row)
+        rows.append({"workload": "geomean",
+                     **{f"{tag}_ipc": gm(v) for tag, v in gmeans.items()}})
+        return rows
+    return _cached("fig17_interval_strategy", run)
+
+
 def fig18_active_warps():
     """Fig 18: IPC vs number of active warps."""
     def run():
@@ -483,6 +530,7 @@ ALL_FIGS = {
     "fig16_conflicts": fig16_conflicts,
     "fig17_cap": fig17_cap_sensitivity,
     "fig17_bank": fig17_bank_ablation,
+    "fig17_interval": fig17_interval_strategy,
     "fig18_warps": fig18_active_warps,
     "fig19_strands": fig19_strands,
     "fig20_wpsm": fig20_warps_per_sm,

@@ -13,9 +13,19 @@ real lifted kernels instead.
 from __future__ import annotations
 
 from repro.sim import SimConfig, baseline_config, design_config
-from repro.workloads import workload_names
+from repro.workloads import get_workload, workload_names
 
 SWEEP_DESIGNS = ("BL", "RFC", "SHRF", "LTRF", "LTRF_conf", "LTRF_plus", "Ideal")
+
+# The interval-formation ablation (ISSUE 5): the paper's algorithm vs the
+# capacity-clamped variant vs naive fixed-length intervals, swept at an
+# interval_cap deliberately larger than the default design's RFC
+# entries-per-warp (128 entries / 8 active slots = 16) so the capacity
+# strategy actually clamps.  Verdicts are computed on LTRF_conf — the
+# paper's full compile pipeline (intervals + ICG renumbering).
+INTERVAL_STRATEGIES_SWEPT = ("paper", "capacity", "fixed:8")
+INTERVAL_SWEEP_CAP = 48
+INTERVAL_VERDICT_DESIGN = "LTRF_conf"
 
 GPU_SCHEDULERS = ("two_level", "gto", "lrr")
 
@@ -57,6 +67,26 @@ def gpu_sweep_jobs(num_sms: int = 2, warps_per_sm: int = 16,
                              num_warps=warps_per_sm * num_sms,
                              num_sms=num_sms, scheduler=s))
         for name in workloads for d in designs for s in schedulers
+    ]
+
+
+def interval_sweep_jobs(workloads=None, table2_config: int = 7,
+                        strategies=INTERVAL_STRATEGIES_SWEPT,
+                        interval_cap: int = INTERVAL_SWEEP_CAP,
+                        designs=SWEEP_DESIGNS,
+                        suite: str | None = None) -> list[tuple[str, SimConfig]]:
+    """The interval-strategy ablation recorded in BENCH_sim.json (and run as
+    the CI interval smoke).  Defaults to the *high-register-pressure*
+    (register-sensitive) workloads of the suite — the kernels whose working
+    sets the strategies actually shape.  Single-SM configs: run them
+    through `SimRunner.sim` like the main sweep."""
+    if workloads is None:
+        workloads = [n for n in workload_names(suite)
+                     if get_workload(n).register_sensitive]
+    return [
+        (name, design_config(d, table2_config=table2_config,
+                             interval_cap=interval_cap, interval_strategy=s))
+        for name in workloads for d in designs for s in strategies
     ]
 
 

@@ -267,6 +267,45 @@ def form_register_intervals(
     return analysis
 
 
+def form_fixed_intervals(prog: Program, length: int) -> IntervalAnalysis:
+    """Naive fixed-length interval formation (``interval_strategy="fixed:N"``).
+
+    Splits every basic block into runs of at most ``length`` instructions and
+    makes each resulting block its own interval (no growing, no merging).
+    Single-entry holds trivially — every interval is one block, which is its
+    own header — but the working set is *unbounded*: a run of N instructions
+    touches whatever it touches.  That is the point: this is the strawman
+    baseline the ablation figures compare the paper's algorithm against.
+    """
+    import copy
+
+    if length < 1:
+        raise ValueError(f"fixed interval length must be >= 1, got {length}")
+    prog = copy.deepcopy(prog)
+    salt = 0
+    work = list(prog.order)
+    while work:
+        label = work.pop(0)
+        if len(prog.blocks[label].instrs) > length:
+            tail = _split_block(prog, label, length, salt)
+            salt += 1
+            work.insert(0, tail)
+
+    intervals: list[Interval] = []
+    block_interval: dict[str, int] = {}
+    for label in prog.order:
+        iv = Interval(iid=len(intervals), header=label, blocks=[label],
+                      working_set=prog.blocks[label].refs())
+        intervals.append(iv)
+        block_interval[label] = iv.iid
+    n_cap = max((iv.size for iv in intervals), default=1)
+    analysis = IntervalAnalysis(prog=prog, intervals=intervals,
+                                block_interval=block_interval,
+                                n_cap=max(n_cap, 1))
+    analysis.validate()
+    return analysis
+
+
 def _reduce(analysis: IntervalAnalysis) -> IntervalAnalysis:
     """Algorithm 2: merge single-predecessor intervals until fixpoint."""
     prog, n_cap = analysis.prog, analysis.n_cap

@@ -6,13 +6,16 @@ Implements the dataflow substrate the paper's §3 (LTRF+ dead-operand bits) and
 * classic backward liveness (block level and per-instruction points);
 * reaching definitions (block level), used to build *webs*: maximal
   def-use chains of one architectural register — the paper's
-  "register-live-range: a chain of common uses of a specific register".
+  "register-live-range: a chain of common uses of a specific register";
+* linearized ``[first, last]`` live intervals with loop extension — the
+  substrate linear-scan register allocation needs (exposed to the frontend
+  through the pipeline's ``live-intervals`` pass).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-from .ir import Instr, Program
+from .ir import Instr, Program, back_edges
 
 
 def block_liveness(prog: Program) -> tuple[dict[str, set[int]], dict[str, set[int]]]:
@@ -66,6 +69,54 @@ def annotate_dead_operands(prog: Program) -> Program:
                 psrcs=ins.psrcs, target=ins.target, dead_srcs=dead,
             )
     return prog
+
+
+def linear_live_intervals(prog: Program) -> tuple[dict[int, int], dict[int, int]]:
+    """[first, last] linear positions per register, extended over loops.
+
+    A register whose first access inside a loop span is a *read* carries a
+    value across the back edge, so its interval must cover the whole span.
+    This is the liveness substrate for linear-scan allocation
+    (`repro.frontend.regalloc`), reached via the pipeline's
+    ``live-intervals`` pass.
+    """
+    first: dict[int, int] = {}
+    last: dict[int, int] = {}
+    block_span: dict[str, tuple[int, int]] = {}
+    pos = 0
+    flat: list[Instr] = []
+    for label in prog.order:
+        start = pos
+        for ins in prog.blocks[label].instrs:
+            for r in ins.regs:
+                first.setdefault(r, pos)
+                last[r] = pos
+            flat.append(ins)
+            pos += 1
+        block_span[label] = (start, pos - 1)
+
+    spans = []
+    for (u, v) in back_edges(prog):
+        s, e = block_span[v][0], block_span[u][1]
+        if s <= e:
+            spans.append((s, e))
+    changed = True
+    while changed:
+        changed = False
+        for (s, e) in spans:
+            defined: set[int] = set()
+            carried: set[int] = set()
+            for ins in flat[s:e + 1]:
+                for r in ins.srcs:
+                    if r not in defined:
+                        carried.add(r)
+                defined.update(ins.dsts)
+            for r in carried:
+                nf, nl = min(first[r], s), max(last[r], e)
+                if (nf, nl) != (first[r], last[r]):
+                    first[r], last[r] = nf, nl
+                    changed = True
+    return first, last
 
 
 # ---------------------------------------------------------------------------

@@ -1,33 +1,39 @@
-"""Compile cache for the LTRF compiler passes.
+"""Compile cache for the LTRF compiler pass pipeline.
 
 The design-space sweeps run the same workload program through the same
 compiler pipeline once per (design, MRF-latency) point even though the
-compiled artifact only depends on (program, pass kind, interval cap, bank
-count).  This module memoizes the three expensive passes —
-`form_register_intervals`, `renumber_registers`, `prefetch_schedule` — plus
-the per-design packaging the simulator needs (`compile_for_sim`), so a
-7-design x N-latency sweep compiles each workload once per distinct pass
+compiled artifact only depends on (program, pass configuration).  This
+module memoizes the expensive passes — interval formation (all strategies),
+ICG construction, register renumbering, prefetch scheduling — plus the
+fully packaged `CompiledPlan` the simulator consumes, so a 7-design x
+N-latency sweep compiles each workload once per distinct pass
 configuration instead of once per simulator instance.
 
-Keys are structural program fingerprints (not object identity), so two
-equal programs parsed independently share cache entries.  All cached values
-are treated as immutable by every consumer: the simulator never mutates the
-analysis, the prefetch ops, or the (split) program it receives.
+The pass *sequencing* lives in `core.pipeline` (`run_compile`); this module
+only caches.  Keys are structural program fingerprints (not object
+identity), so two equal programs parsed independently share cache entries.
+All cached values are treated as immutable by every consumer: the simulator
+never mutates the analysis, the prefetch ops, or the (split) program it
+receives.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-from .intervals import IntervalAnalysis, form_register_intervals
+from .icg import ICG, build_icg
+from .intervals import (
+    IntervalAnalysis, form_fixed_intervals, form_register_intervals,
+)
 from .ir import Program
 from .prefetch import PrefetchOp, prefetch_schedule
-from .renumber import RenumberResult, bank_of, renumber_registers
+from .renumber import RenumberResult, renumber_registers
 
 # Compiled-plan layout revision: part of every _SIM_PLANS key (and available
 # to any consumer deriving persistent keys from plans).  Bump when
 # CompiledPlan gains/changes fields or the packaging itself changes behavior.
 # rev 2: per-instruction operand bank vectors (instr_banks) + renumber axis.
-PLAN_REV = 2
+# rev 3: pipeline emission + per-pass stats + interval-strategy axis.
+PLAN_REV = 3
 
 # program id -> (program ref, fingerprint).  The strong reference keeps the
 # id stable for the lifetime of the entry.
@@ -95,25 +101,63 @@ def cached_intervals(prog: Program, n_cap: int,
     return an
 
 
-def cached_renumber(prog: Program, n_cap: int, num_banks: int) -> RenumberResult:
-    """Memoized interval formation + register renumbering (read-only result)."""
-    key = (program_fingerprint(prog), n_cap, num_banks)
+def cached_fixed_intervals(prog: Program, length: int) -> IntervalAnalysis:
+    """Memoized `form_fixed_intervals` (``interval_strategy="fixed:N"``)."""
+    key = (program_fingerprint(prog), "fixed", length)
+    an = _INTERVALS.get(key)
+    if an is None:
+        _STATS["misses"] += 1
+        an = _put(_INTERVALS, key, form_fixed_intervals(prog, length))
+    else:
+        _STATS["hits"] += 1
+    return an
+
+
+def _analysis_key(analysis: IntervalAnalysis) -> tuple:
+    """Structural identity of an interval analysis.
+
+    The interval *grouping* and *working sets* are part of the key (not
+    just the count): strategies registered through the pipeline's extension
+    point can split a program identically yet group its blocks — or trim
+    their working sets — differently, and the ICG/renumber/prefetch results
+    depend on both."""
+    return (program_fingerprint(analysis.prog), analysis.n_cap,
+            tuple((iv.iid, iv.header, iv.solo,
+                   tuple(sorted(iv.working_set)))
+                  for iv in analysis.intervals),
+            tuple(sorted(analysis.block_interval.items())))
+
+
+def cached_icg(analysis: IntervalAnalysis) -> ICG:
+    """Memoized `build_icg` over a (cached) interval analysis (read-only)."""
+    return cached_value(("icg", _analysis_key(analysis)),
+                        lambda: build_icg(analysis))
+
+
+def cached_renumber_analysis(analysis: IntervalAnalysis, num_banks: int,
+                             icg: ICG | None = None) -> RenumberResult:
+    """Memoized `renumber_registers` over a (cached) analysis (read-only)."""
+    key = (_analysis_key(analysis), num_banks)
     rr = _RENUMBER.get(key)
     if rr is None:
         _STATS["misses"] += 1
         rr = _put(_RENUMBER, key,
-                  renumber_registers(cached_intervals(prog, n_cap),
-                                     num_banks=num_banks))
+                  renumber_registers(analysis, num_banks=num_banks, icg=icg))
     else:
         _STATS["hits"] += 1
     return rr
 
 
+def cached_renumber(prog: Program, n_cap: int, num_banks: int) -> RenumberResult:
+    """Memoized interval formation + register renumbering (read-only result)."""
+    an = cached_intervals(prog, n_cap)
+    return cached_renumber_analysis(an, num_banks, icg=cached_icg(an))
+
+
 def cached_prefetch_ops(analysis: IntervalAnalysis,
                         num_banks: int) -> dict[int, PrefetchOp]:
     """Memoized `prefetch_schedule`, keyed by interval_id (read-only)."""
-    key = (program_fingerprint(analysis.prog), analysis.n_cap, num_banks,
-           len(analysis.intervals))
+    key = (_analysis_key(analysis), num_banks)
     ops = _PREFETCH.get(key)
     if ops is None:
         _STATS["misses"] += 1
@@ -136,7 +180,8 @@ class CompiledPlan:
     ``id(instruction)`` (instructions of ``prog`` — the plan's own, possibly
     renumbered, numbering) -> (source bank vector, dest bank vector) so the
     simulator's bank-arbitration stage never recomputes ``bank_of`` per
-    issue.
+    issue.  ``pass_stats`` is the pipeline's per-pass record (counters +
+    wall time, keyed by pass name in execution order).
     """
     prog: Program
     block_interval: dict[str, int]
@@ -146,73 +191,47 @@ class CompiledPlan:
     order_index: dict[str, int] = field(default_factory=dict)
     instr_banks: dict[int, tuple[tuple[int, ...], tuple[int, ...]]] = \
         field(default_factory=dict)
-
-
-def _finish(prog: Program, block_interval, pf_ops, live_sets=None,
-            plus_fetch=None, num_banks: int = 16) -> CompiledPlan:
-    banks: dict[int, tuple[tuple[int, ...], tuple[int, ...]]] = {}
-    for _, _, ins in prog.instructions():
-        banks[id(ins)] = (
-            tuple(bank_of(r, num_banks) for r in ins.srcs),
-            tuple(bank_of(r, num_banks) for r in ins.dsts),
-        )
-    return CompiledPlan(
-        prog=prog, block_interval=block_interval, pf_ops=pf_ops,
-        live_sets=live_sets or {}, plus_fetch=plus_fetch or {},
-        order_index={l: i for i, l in enumerate(prog.order)},
-        instr_banks=banks,
-    )
+    pass_stats: dict[str, dict] = field(default_factory=dict)
 
 
 def compile_for_sim(prog: Program, design: str, interval_cap: int,
-                    num_banks: int, renumber: str = "icg") -> CompiledPlan:
+                    num_banks: int, renumber: str = "icg",
+                    interval_strategy: str = "paper",
+                    rfc_per_warp: int = 0) -> CompiledPlan:
     """The simulator's compile step, memoized per (program, design family).
 
-    Mirrors the per-design pipeline the paper evaluates: SHRF uses
-    strand-bounded intervals, LTRF/LTRF+ plain register-intervals, LTRF_conf
-    adds register renumbering, and the non-cached designs need no analysis.
-    ``renumber`` is the §4 ablation axis: ``"identity"`` makes LTRF_conf skip
-    the ICG coloring pass and keep the original register numbers (the knob
-    is a no-op for every other design, and is normalized out of the cache
-    key for them).
+    Runs the staged pass pipeline (`core.pipeline.run_compile`) the paper
+    evaluates per design: SHRF uses strand-bounded intervals, LTRF/LTRF+
+    plain register-intervals, LTRF_conf adds ICG register renumbering, and
+    the non-cached designs need no analysis.  ``renumber`` is the §4
+    ablation axis (``"identity"`` skips the coloring pass; normalized out of
+    the key for every design but LTRF_conf).  ``interval_strategy`` selects
+    the interval-formation strategy (``"paper"``/``"capacity"``/
+    ``"fixed:N"``); with ``"capacity"``, ``rfc_per_warp`` is the RFC
+    entries-per-warp bound the working sets are clamped to.  Both are
+    normalized (`pipeline.effective_strategy`) so no-op combinations share
+    one cached plan.
     """
+    from .pipeline import PIPELINE_REV, effective_strategy, run_compile
+
     eff_renumber = renumber if design == "LTRF_conf" else "icg"
-    key = (PLAN_REV, program_fingerprint(prog), design, interval_cap,
-           num_banks, eff_renumber)
+    eff_strategy = effective_strategy(design, interval_strategy,
+                                      interval_cap, rfc_per_warp)
+    key = (PLAN_REV, PIPELINE_REV, program_fingerprint(prog), design,
+           interval_cap, num_banks, eff_renumber, eff_strategy)
     plan = _SIM_PLANS.get(key)
     if plan is not None:
         _STATS["hits"] += 1
         return plan
     _STATS["misses"] += 1
-
-    if design in ("BL", "RFC", "Ideal"):
-        plan = _finish(prog, {}, {}, num_banks=num_banks)
-    else:
-        if design == "SHRF":
-            an = cached_intervals(prog, interval_cap, strand_mode=True)
-        elif design == "LTRF_conf" and eff_renumber == "icg":
-            an = cached_renumber(prog, interval_cap, num_banks).analysis
-        else:  # LTRF, LTRF_plus, LTRF_conf with identity numbering
-            an = cached_intervals(prog, interval_cap)
-        ops = cached_prefetch_ops(an, num_banks)
-        live_sets: dict[int, frozenset[int]] = {}
-        plus_fetch: dict[int, tuple[frozenset[int], int]] = {}
-        if design == "LTRF_plus":
-            # LTRF+ (paper §3.2): only LIVE registers are written back on
-            # deactivation and refetched on activation; dead working-set
-            # entries get cache space but no data movement.
-            from .liveness import block_liveness
-            live_in, _ = block_liveness(an.prog)
-            for iv in an.intervals:
-                live = frozenset(live_in[iv.header] & iv.working_set)
-                live_sets[iv.iid] = live
-                occ = [0] * num_banks
-                for r in live:
-                    occ[bank_of(r, num_banks)] += 1
-                rounds = max(occ) if any(occ) else 1
-                plus_fetch[iv.iid] = (live, rounds)
-        plan = _finish(an.prog, dict(an.block_interval), ops,
-                       live_sets, plus_fetch, num_banks=num_banks)
+    kind, arg = eff_strategy
+    if kind == "capacity":
+        strategy, eff_rfc = "capacity", arg
+    else:  # paper, fixed:N, registered extension strategies
+        strategy, eff_rfc = (f"{kind}:{arg}" if arg else kind), 0
+    plan = run_compile(prog, design, interval_cap, num_banks,
+                       renumber=eff_renumber, interval_strategy=strategy,
+                       rfc_per_warp=eff_rfc)
     _put(_SIM_PLANS, key, plan)
     return plan
 

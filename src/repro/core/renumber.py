@@ -69,8 +69,12 @@ def renumber_registers(
     scheme: str = "interleaved",
     regs_per_bank: int = 2,
     max_regs: int = 256,
+    icg: ICG | None = None,
 ) -> RenumberResult:
-    icg = build_icg(analysis)
+    # The pipeline's ICG pass hands its (memoized) graph in; standalone
+    # callers let the pass pair collapse into one call.
+    if icg is None:
+        icg = build_icg(analysis)
     coloring = chaitin_color(icg.adj, num_banks)
 
     # Assign physical registers per color-bank, reusing a register across

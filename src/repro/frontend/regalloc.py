@@ -4,9 +4,11 @@ The jaxpr lifter emits over unlimited virtual registers; the simulator's
 occupancy model needs a compiled ``regs_per_thread`` under a configurable
 ``maxregcount`` (the nvcc knob real kernels are tuned with).  This pass:
 
-* computes live intervals over the linearized program, conservatively
-  extending any register that is live across a loop back edge to the whole
-  loop span (its value must survive every iteration);
+* computes live intervals over the linearized program through the core
+  compiler pipeline's liveness passes (`repro.core.pipeline.frontend_passes`
+  -> `repro.core.liveness.linear_live_intervals`), conservatively extending
+  any register that is live across a loop back edge to the whole loop span
+  (its value must survive every iteration);
 * runs a classic linear scan, assigning dense architectural ids — dense ids
   keep the interleaved bank mapping (``reg % num_banks``) balanced;
 * on pressure above ``maxregcount``, spills the farthest-ending live ranges
@@ -23,7 +25,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from heapq import heappop, heappush
 
-from repro.core.ir import BasicBlock, Instr, Program, back_edges
+from repro.core.ir import BasicBlock, Instr, Program
+from repro.core.pipeline import CompileContext, PassManager, frontend_passes
 
 # Reserved when spilling: 3 shuttle registers (mad reads up to 3 sources)
 # plus the spill base address register.
@@ -44,49 +47,11 @@ class AllocResult:
         return len(self.spilled)
 
 
-def _live_intervals(prog: Program) -> tuple[dict[int, int], dict[int, int]]:
-    """[first, last] linear positions per register, extended over loops.
-
-    A register whose first access inside a loop span is a *read* carries a
-    value across the back edge, so its interval must cover the whole span.
-    """
-    first: dict[int, int] = {}
-    last: dict[int, int] = {}
-    block_span: dict[str, tuple[int, int]] = {}
-    pos = 0
-    flat: list[Instr] = []
-    for label in prog.order:
-        start = pos
-        for ins in prog.blocks[label].instrs:
-            for r in ins.regs:
-                first.setdefault(r, pos)
-                last[r] = pos
-            flat.append(ins)
-            pos += 1
-        block_span[label] = (start, pos - 1)
-
-    spans = []
-    for (u, v) in back_edges(prog):
-        s, e = block_span[v][0], block_span[u][1]
-        if s <= e:
-            spans.append((s, e))
-    changed = True
-    while changed:
-        changed = False
-        for (s, e) in spans:
-            defined: set[int] = set()
-            carried: set[int] = set()
-            for ins in flat[s:e + 1]:
-                for r in ins.srcs:
-                    if r not in defined:
-                        carried.add(r)
-                defined.update(ins.dsts)
-            for r in carried:
-                nf, nl = min(first[r], s), max(last[r], e)
-                if (nf, nl) != (first[r], last[r]):
-                    first[r], last[r] = nf, nl
-                    changed = True
-    return first, last
+def _liveness_via_pipeline(prog: Program) -> tuple[dict[int, int], dict[int, int]]:
+    """Run the core liveness pipeline; returns linear [first, last] intervals."""
+    ctx = CompileContext(prog=prog, design="frontend")
+    PassManager(frontend_passes()).run(ctx)
+    return ctx.artifacts["linear_live_intervals"]
 
 
 def _linear_scan(ivals: list[tuple[int, int, int]],
@@ -125,7 +90,7 @@ def allocate_registers(prog: Program, maxregcount: int = 64) -> AllocResult:
     if maxregcount < _RESERVED + 2:
         raise ValueError(f"maxregcount={maxregcount} below the reserved "
                          f"spill machinery ({_RESERVED + 2} registers)")
-    first, last = _live_intervals(prog)
+    first, last = _liveness_via_pipeline(prog)
     ivals = sorted((first[r], last[r], r) for r in first)
 
     assign, spilled = _linear_scan(ivals, maxregcount)

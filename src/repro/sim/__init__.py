@@ -1,6 +1,6 @@
 from .engine import (
-    BANK_MODELS, DESIGNS, RENUMBER_MODES, SCHEDULERS, SimConfig, SimResult,
-    Simulator, simulate,
+    BANK_MODELS, DESIGNS, INTERVAL_STRATEGIES, RENUMBER_MODES, SCHEDULERS,
+    SimConfig, SimResult, Simulator, simulate,
 )
 from .designs import (
     TABLE2, baseline_config, design_config, max_tolerable_latency,
@@ -10,8 +10,8 @@ from .gpu import GpuResult, simulate_gpu
 
 __all__ = [
     "SimConfig", "SimResult", "Simulator", "simulate", "DESIGNS",
-    "SCHEDULERS", "BANK_MODELS", "RENUMBER_MODES", "GpuResult",
-    "simulate_gpu",
+    "SCHEDULERS", "BANK_MODELS", "RENUMBER_MODES", "INTERVAL_STRATEGIES",
+    "GpuResult", "simulate_gpu",
     "TABLE2", "baseline_config", "design_config", "max_tolerable_latency",
     "normalized_ipc", "run",
 ]

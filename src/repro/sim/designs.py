@@ -49,6 +49,7 @@ def design_config(
     mem_partitions: int = 0,
     bank_model: str = "none",
     renumber: str = "icg",
+    interval_strategy: str = "paper",
 ) -> SimConfig:
     """One design point.  GPU-scale knobs: ``num_sms`` > 1 (run the config
     through `repro.sim.gpu.simulate_gpu`; ``num_warps`` is then the kernel's
@@ -57,7 +58,9 @@ def design_config(
     SM, i.e. uncontended fair share).  Bank-level knobs:
     ``bank_model="arbitrated"`` turns on same-cycle bank arbitration for
     operand reads/writebacks, ``renumber="identity"`` makes LTRF_conf skip
-    the ICG renumbering pass (the §4.3 ablation axis)."""
+    the ICG renumbering pass (the §4.3 ablation axis).  Compiler knob:
+    ``interval_strategy`` picks the interval-formation strategy for the
+    LTRF-family designs (``"paper"``/``"capacity"``/``"fixed:N"``)."""
     t = TABLE2[table2_config]
     size = rf_size_kb if rf_size_kb is not None else BASE_RF_KB * t["cap_mult"]
     mult = mrf_latency_mult if mrf_latency_mult is not None else t["lat_mult"]
@@ -76,6 +79,7 @@ def design_config(
         mem_partitions=mem_partitions,
         bank_model=bank_model,
         renumber=renumber,
+        interval_strategy=interval_strategy,
     )
 
 

@@ -43,6 +43,7 @@ from collections import OrderedDict
 from dataclasses import dataclass, field
 from heapq import heappop, heappush, heapreplace
 
+from repro.core.pipeline import INTERVAL_STRATEGIES, parse_interval_strategy
 from repro.core.plan_cache import compile_for_sim
 from repro.core.ir import Instr, Program
 from repro.workloads.suite import Workload
@@ -53,7 +54,8 @@ DESIGNS = ("BL", "RFC", "SHRF", "LTRF", "LTRF_conf", "LTRF_plus", "Ideal")
 # sim cache (benchmarks.orchestrator), so stale artifacts never replay across
 # engine-behavior revisions.
 # rev 2: bank_model/renumber config axes + bank-conflict counters.
-ENGINE_REV = 2
+# rev 3: interval_strategy config axis + prefetch_stall_cycles counter.
+ENGINE_REV = 3
 
 # Designs with a software-managed register cache (two-level scheduling).
 _CACHED_DESIGNS = frozenset({"LTRF", "LTRF_conf", "LTRF_plus", "SHRF"})
@@ -83,6 +85,17 @@ BANK_MODELS = ("none", "arbitrated")
 #   identity - skip the coloring pass: LTRF_conf keeps the original register
 #              numbers, exposing the bank conflicts renumbering would remove
 RENUMBER_MODES = ("icg", "identity")
+
+# Interval-formation strategies (``SimConfig.interval_strategy``), resolved
+# by the compiler pass pipeline (repro.core.pipeline):
+#   paper      - Algorithms 1+2 (the default; golden-pinned bit-identical)
+#   capacity   - the paper's algorithm with the working-set cap clamped to
+#                the design's RFC entries-per-warp, so prefetch rounds can
+#                never overflow the register cache
+#   fixed:N    - naive fixed-length (<= N instructions) intervals
+# The knob only affects the interval-prefetching designs (LTRF family);
+# SHRF always uses strands, BL/RFC/Ideal compile no intervals at all.
+# INTERVAL_STRATEGIES lists the base names.
 
 
 @dataclass(frozen=True)
@@ -114,6 +127,7 @@ class SimConfig:
                                    # (0 = one per SM, i.e. uncontended)
     bank_model: str = "none"       # RF bank arbitration (BANK_MODELS)
     renumber: str = "icg"          # renumbering ablation axis (RENUMBER_MODES)
+    interval_strategy: str = "paper"  # interval formation (INTERVAL_STRATEGIES)
 
     @property
     def mrf_cycles(self) -> float:
@@ -122,6 +136,12 @@ class SimConfig:
     @property
     def rfc_entries(self) -> int:
         return self.rfc_size_kb * 1024 // 128  # 1024-bit warp registers
+
+    @property
+    def rfc_entries_per_warp(self) -> int:
+        """Register-cache entries one active warp can claim — the bound the
+        ``capacity`` interval strategy clamps working sets to."""
+        return self.rfc_entries // max(self.active_slots, 1)
 
 
 @dataclass
@@ -136,6 +156,9 @@ class SimResult:
     mrf_accesses: int = 0
     prefetch_ops: int = 0
     prefetch_cycles: int = 0
+    prefetch_stall_cycles: int = 0  # cycles warps spent blocked on an
+                                    # in-flight interval prefetch (queueing
+                                    # for a prefetch slot + the fetch itself)
     writeback_regs: int = 0
     activations: int = 0
     bank_conflicts: int = 0        # extra serialization rounds (arbitrated)
@@ -200,11 +223,14 @@ class Simulator:
             raise ValueError(
                 f"unknown renumber mode {cfg.renumber!r}; "
                 f"one of {RENUMBER_MODES}")
+        parse_interval_strategy(cfg.interval_strategy)  # raises on junk
         self.cfg = cfg
         self.w = workload
         plan = compile_for_sim(workload.program, cfg.design,
                                cfg.interval_cap, cfg.num_banks,
-                               renumber=cfg.renumber)
+                               renumber=cfg.renumber,
+                               interval_strategy=cfg.interval_strategy,
+                               rfc_per_warp=cfg.rfc_entries_per_warp)
         self.prog: Program = plan.prog
         self.block_interval = plan.block_interval
         self.pf_ops = plan.pf_ops
@@ -447,6 +473,9 @@ class Simulator:
         heappush(self._wake, (done, wp.wid))
         self.result.prefetch_ops += 1
         self.result.prefetch_cycles += int(lat)
+        # the warp is blocked from issue until the prefetch lands (including
+        # any wait for a free prefetch slot)
+        self.result.prefetch_stall_cycles += done - cycle
         self.result.mrf_accesses += len(fetch)
         reg_ready = wp.reg_ready
         for r in op.bitvector:

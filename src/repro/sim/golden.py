@@ -6,6 +6,11 @@ oracle for the event-heap engine in `engine.py`.  The golden-equivalence
 harness (tests/test_sim_golden.py, benchmarks) asserts that both engines
 produce bit-identical `SimResult` counters for every (design, workload)
 pair.  Do not optimize this file; optimize `engine.py` and prove equality.
+
+The golden engine predates the pluggable pass pipeline: it always runs the
+paper's interval-formation algorithm (``SimConfig.interval_strategy`` is
+ignored, exactly like the gto/lrr schedulers and multi-SM knobs), so
+differential comparisons must pin ``interval_strategy="paper"``.
 """
 from __future__ import annotations
 
@@ -213,6 +218,9 @@ class GoldenSimulator:
         wp.ready_at = done
         self.result.prefetch_ops += 1
         self.result.prefetch_cycles += int(lat)
+        # the warp is blocked from issue until the prefetch lands (including
+        # any wait for a free prefetch slot)
+        self.result.prefetch_stall_cycles += done - cycle
         self.result.mrf_accesses += len(fetch)
         for r in op.bitvector:
             wp.reg_ready[r] = max(wp.reg_ready.get(r, 0), done)

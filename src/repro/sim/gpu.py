@@ -143,6 +143,7 @@ class GpuResult:
     mrf_accesses: int = 0
     prefetch_ops: int = 0
     prefetch_cycles: int = 0
+    prefetch_stall_cycles: int = 0
     writeback_regs: int = 0
     activations: int = 0
     bank_conflicts: int = 0
@@ -187,6 +188,7 @@ def aggregate(cfg: SimConfig, results: list[SimResult],
         mrf_accesses=sum(r.mrf_accesses for r in results),
         prefetch_ops=sum(r.prefetch_ops for r in results),
         prefetch_cycles=sum(r.prefetch_cycles for r in results),
+        prefetch_stall_cycles=sum(r.prefetch_stall_cycles for r in results),
         writeback_regs=sum(r.writeback_regs for r in results),
         activations=sum(r.activations for r in results),
         bank_conflicts=sum(r.bank_conflicts for r in results),

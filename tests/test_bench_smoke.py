@@ -29,6 +29,19 @@ def test_bench_cli_imports_and_help(module):
     assert "usage" in r.stdout.lower(), (module, r.stdout)
 
 
+def test_bench_sim_help_lists_all_smoke_flags():
+    """Every CI smoke entry point is wired into the bench_sim CLI (the full
+    interval/bank sweeps run as their own CI steps, not in tier-1)."""
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_sim", "--help"],
+        capture_output=True, text=True, timeout=300, cwd=ROOT,
+        env=jax_subprocess_env())
+    assert r.returncode == 0, (r.stdout, r.stderr)
+    for flag in ("--smoke", "--gpu-smoke", "--bank-smoke",
+                 "--interval-smoke", "--baseline", "--suite"):
+        assert flag in r.stdout, flag
+
+
 def test_bench_sim_gpu_smoke_cli():
     """The CI GPU-scale smoke entry point stays runnable end to end."""
     r = subprocess.run(

@@ -1,0 +1,239 @@
+"""The compiler pass pipeline (ISSUE 5 tentpole).
+
+Covers the pipeline machinery (`CompileContext`/`PassManager`/pass
+registry), the pluggable interval-formation strategies, the cache-key
+normalization in `compile_for_sim`, and the per-pass stats that travel on
+`CompiledPlan`.  Bit-identity of the refactor itself is pinned where it
+matters: the pipeline's per-design artifacts must equal what the frozen
+golden engine compiles on its own.
+"""
+import pytest
+
+from repro.core.intervals import form_fixed_intervals, form_register_intervals
+from repro.core.ir import parse_asm
+from repro.core.pipeline import (
+    INTERVAL_STRATEGIES, CompileContext, Pass, PassManager, capacity_cap,
+    effective_strategy, frontend_passes, parse_interval_strategy, run_compile,
+    sim_passes,
+)
+from repro.core.plan_cache import compile_for_sim
+from repro.sim import SimConfig, Simulator, design_config
+from repro.workloads import WORKLOADS
+
+
+# ----------------------------------------------------------------- machinery
+
+def test_pass_manager_runs_in_order_and_records_stats():
+    prog = parse_asm("mov r0, 1\nadd r1, r0, r0\nexit", name="t")
+    order = []
+
+    def mk(name, extra):
+        def run(ctx):
+            order.append(name)
+            return {"extra": extra}
+        return Pass(name, run)
+
+    ctx = CompileContext(prog=prog)
+    PassManager([mk("a", 1), mk("b", 2)]).run(ctx)
+    assert order == ["a", "b"]
+    assert list(ctx.stats) == ["a", "b"]
+    assert ctx.stats["a"]["extra"] == 1
+    assert all("time_ms" in s for s in ctx.stats.values())
+
+
+def test_pass_applies_gate_skips():
+    prog = parse_asm("exit", name="t")
+    ran = []
+    p = Pass("never", lambda ctx: ran.append(1), applies=lambda ctx: False)
+    ctx = PassManager([p]).run(CompileContext(prog=prog))
+    assert not ran and "never" not in ctx.stats
+
+
+def test_sim_passes_order_matches_the_staged_pipeline():
+    names = [p.name for p in sim_passes()]
+    assert names == ["intervals", "liveness", "icg", "renumber",
+                     "prefetch", "emit"]
+    assert [p.name for p in frontend_passes()] == ["live-intervals"]
+
+
+def test_compiled_plan_carries_pass_stats():
+    w = WORKLOADS["srad"]
+    plan = compile_for_sim(w.program, "LTRF_conf", 16, 16)
+    assert list(plan.pass_stats) == ["intervals", "icg", "renumber",
+                                     "prefetch", "emit"]
+    assert plan.pass_stats["intervals"]["strategy"] == "paper"
+    assert plan.pass_stats["prefetch"]["prefetch_ops"] == len(plan.pf_ops)
+    # uncached designs skip straight to emission
+    bl = compile_for_sim(w.program, "BL", 16, 16)
+    assert list(bl.pass_stats) == ["emit"]
+    # the renumber stages only run for LTRF_conf with icg numbering, and
+    # block liveness only where it is consumed (LTRF_plus live fetch sets)
+    ltrf = compile_for_sim(w.program, "LTRF", 16, 16)
+    assert "icg" not in ltrf.pass_stats and "renumber" not in ltrf.pass_stats
+    assert "liveness" not in ltrf.pass_stats
+    plus = compile_for_sim(w.program, "LTRF_plus", 16, 16)
+    assert list(plus.pass_stats) == ["intervals", "liveness", "prefetch",
+                                     "emit"]
+    assert plus.live_sets  # the liveness artifact feeds the emitted plan
+
+
+def test_pipeline_artifacts_match_golden_compile():
+    """The refactor cannot change compile results: per design, the emitted
+    plan equals what the frozen golden engine compiles for itself."""
+    from repro.sim.golden import GoldenSimulator
+
+    for name in ("srad", "btree"):
+        w = WORKLOADS[name]
+        for design in ("SHRF", "LTRF", "LTRF_conf", "LTRF_plus"):
+            cfg = design_config(design, table2_config=7, num_warps=8)
+            g = GoldenSimulator(cfg, w)
+            plan = compile_for_sim(w.program, design, cfg.interval_cap,
+                                   cfg.num_banks)
+            assert plan.prog.render() == g.prog.render(), (name, design)
+            assert plan.block_interval == g.block_interval, (name, design)
+            assert plan.pf_ops == g.pf_ops, (name, design)
+
+
+# ---------------------------------------------------------------- strategies
+
+def test_parse_interval_strategy():
+    assert parse_interval_strategy("paper") == ("paper", 0)
+    assert parse_interval_strategy("capacity") == ("capacity", 0)
+    assert parse_interval_strategy("fixed:8") == ("fixed", 8)
+    for bad in ("strands", "fixed", "fixed:0", "fixed:-1", "fixed:x", ""):
+        with pytest.raises(ValueError):
+            parse_interval_strategy(bad)
+    assert INTERVAL_STRATEGIES == ("paper", "capacity", "fixed")
+
+
+def test_capacity_cap_clamps():
+    assert capacity_cap(48, 16) == 16
+    assert capacity_cap(8, 16) == 8
+    assert capacity_cap(48, 0) == 48  # 0 = unbounded
+    assert capacity_cap(48, -1) == 48
+
+
+def test_effective_strategy_normalization():
+    # no-op combinations all collapse onto the paper key
+    assert effective_strategy("BL", "fixed:8", 16, 0) == ("paper", 0)
+    assert effective_strategy("SHRF", "capacity", 48, 16) == ("paper", 0)
+    assert effective_strategy("LTRF", "capacity", 16, 16) == ("paper", 0)
+    # live combinations keep their identity (+ the effective bound)
+    assert effective_strategy("LTRF", "capacity", 48, 16) == ("capacity", 16)
+    assert effective_strategy("LTRF_conf", "fixed:8", 16, 0) == ("fixed", 8)
+
+
+def test_noop_strategies_share_one_cached_plan():
+    w = WORKLOADS["srad"]
+    a = compile_for_sim(w.program, "BL", 16, 16, interval_strategy="paper")
+    b = compile_for_sim(w.program, "BL", 16, 16, interval_strategy="fixed:8")
+    assert a is b
+    # capacity that does not clamp degenerates to paper
+    c = compile_for_sim(w.program, "LTRF", 16, 16)
+    d = compile_for_sim(w.program, "LTRF", 16, 16,
+                        interval_strategy="capacity", rfc_per_warp=16)
+    assert c is d
+
+
+def test_capacity_strategy_bounds_working_sets():
+    w = WORKLOADS["srad"]
+    plan = compile_for_sim(w.program, "LTRF", 48, 16,
+                           interval_strategy="capacity", rfc_per_warp=8)
+    assert plan.pf_ops  # intervals exist
+    assert max(len(op.bitvector) for op in plan.pf_ops.values()) <= 8
+    assert plan.pass_stats["intervals"]["cap"] == 8
+    # the paper strategy at the oversized cap does exceed the bound
+    paper = compile_for_sim(w.program, "LTRF", 48, 16)
+    assert max(len(op.bitvector) for op in paper.pf_ops.values()) > 8
+
+
+def test_fixed_intervals_shape():
+    w = WORKLOADS["kmeans"]
+    an = form_fixed_intervals(w.program, 8)
+    an.validate()
+    # every interval is exactly one block of at most 8 instructions
+    for iv in an.intervals:
+        assert len(iv.blocks) == 1 and iv.header == iv.blocks[0]
+        assert len(an.prog.blocks[iv.header].instrs) <= 8
+    assert len(an.intervals) == len(an.prog.order)
+    assert an.prog.num_instrs() == w.program.num_instrs()
+    with pytest.raises(ValueError):
+        form_fixed_intervals(w.program, 0)
+
+
+def test_fixed_strategy_compiles_and_differs_from_paper():
+    w = WORKLOADS["srad"]
+    fixed = compile_for_sim(w.program, "LTRF", 16, 16,
+                            interval_strategy="fixed:4")
+    paper = compile_for_sim(w.program, "LTRF", 16, 16)
+    assert len(fixed.pf_ops) > len(paper.pf_ops)
+    assert fixed.pass_stats["intervals"]["strategy"] == "fixed:4"
+
+
+def test_register_interval_strategy_extension_point():
+    """A registered strategy is selectable end to end — straight from
+    `SimConfig.interval_strategy` through the engine and the plan cache."""
+    from repro.core import pipeline as pl
+
+    with pytest.raises(ValueError):
+        parse_interval_strategy("halfcap")  # not registered yet
+
+    @pl.register_interval_strategy("halfcap")
+    def _half(ctx, arg):
+        return form_register_intervals(ctx.prog,
+                                       max(1, ctx.interval_cap // (arg or 2)))
+
+    try:
+        assert parse_interval_strategy("halfcap") == ("halfcap", 0)
+        assert parse_interval_strategy("halfcap:4") == ("halfcap", 4)
+        with pytest.raises(ValueError):
+            parse_interval_strategy("halfcap:zero")
+        w = WORKLOADS["kmeans"]
+        cfg = design_config("LTRF", table2_config=7, num_warps=4,
+                            interval_strategy="halfcap")
+        s = Simulator(cfg, w)
+        plan = compile_for_sim(w.program, "LTRF", cfg.interval_cap,
+                               cfg.num_banks, interval_strategy="halfcap")
+        assert plan.pass_stats["intervals"]["cap"] == cfg.interval_cap // 2
+        r = Simulator(cfg, w).run()
+        assert r.instructions > 0
+        assert s.pf_ops is plan.pf_ops  # one cached plan, keyed by the name
+    finally:
+        pl._STRATEGIES.pop("halfcap", None)
+
+
+# --------------------------------------------------------------- sim plumbing
+
+def test_simulator_rejects_unknown_strategy():
+    w = WORKLOADS["bfs"]
+    with pytest.raises(ValueError):
+        Simulator(SimConfig(interval_strategy="best-effort", num_warps=4), w)
+    with pytest.raises(ValueError):
+        Simulator(SimConfig(interval_strategy="fixed:0", num_warps=4), w)
+
+
+def test_rfc_entries_per_warp_property():
+    cfg = SimConfig()
+    assert cfg.rfc_entries == 128
+    assert cfg.rfc_entries_per_warp == 16  # 128 entries / 8 active slots
+    assert SimConfig(active_slots=4).rfc_entries_per_warp == 32
+
+
+def test_frontend_pipeline_matches_core_liveness():
+    from repro.core.liveness import linear_live_intervals
+
+    prog = WORKLOADS["kmeans"].program
+    ctx = CompileContext(prog=prog, design="frontend")
+    PassManager(frontend_passes()).run(ctx)
+    assert ctx.artifacts["linear_live_intervals"] == \
+        linear_live_intervals(prog)
+    assert "live-intervals" in ctx.stats
+
+
+def test_run_compile_equals_cached_compile_content():
+    w = WORKLOADS["btree"]
+    direct = run_compile(w.program, "LTRF", 16, 16)
+    cached = compile_for_sim(w.program, "LTRF", 16, 16)
+    assert direct.prog.render() == cached.prog.render()
+    assert direct.block_interval == cached.block_interval
+    assert direct.pf_ops == cached.pf_ops

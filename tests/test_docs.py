@@ -18,7 +18,8 @@ import re
 import pytest
 
 from repro.sim import (
-    BANK_MODELS, DESIGNS, RENUMBER_MODES, SCHEDULERS, SimConfig, SimResult,
+    BANK_MODELS, DESIGNS, INTERVAL_STRATEGIES, RENUMBER_MODES, SCHEDULERS,
+    SimConfig, SimResult,
 )
 from repro.sim.designs import TABLE2, baseline_config, design_config
 
@@ -30,7 +31,8 @@ MARKDOWN_FILES = sorted([ROOT / "README.md", *DOCS.glob("*.md")])
 
 
 def test_docs_tree_exists():
-    for name in ("architecture.md", "simulator.md", "configuration.md"):
+    for name in ("architecture.md", "simulator.md", "configuration.md",
+                 "compiler.md"):
         assert (DOCS / name).is_file(), f"docs/{name} missing"
 
 
@@ -62,8 +64,24 @@ def test_every_design_config_knob_documented():
 
 def test_design_scheduler_and_mode_names_documented():
     doc = CONFIG_DOC.read_text()
-    for name in (*DESIGNS, *SCHEDULERS, *BANK_MODELS, *RENUMBER_MODES):
+    for name in (*DESIGNS, *SCHEDULERS, *BANK_MODELS, *RENUMBER_MODES,
+                 *INTERVAL_STRATEGIES):
         assert f"`{name}`" in doc, f"{name!r} not named in configuration.md"
+
+
+def test_compiler_doc_names_the_pipeline():
+    """docs/compiler.md documents every simulator pipeline pass and every
+    interval strategy (keeps the pass/strategy docs from going stale)."""
+    from repro.core.pipeline import frontend_passes, sim_passes
+
+    doc = (DOCS / "compiler.md").read_text()
+    for p in (*sim_passes(), *frontend_passes()):
+        assert f"`{p.name}`" in doc, f"pass {p.name!r} undocumented"
+    for s in INTERVAL_STRATEGIES:
+        assert f"`{s}" in doc, f"strategy {s!r} undocumented"
+    for name in ("CompileContext", "PassManager", "pass_stats",
+                 "PIPELINE_REV"):
+        assert name in doc, f"{name} undocumented in compiler.md"
 
 
 def test_memtech_table_documented():

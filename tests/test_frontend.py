@@ -125,6 +125,55 @@ def test_regalloc_spill_path_still_simulates():
     assert simulate(tight, cfg) == golden_simulate(tight, cfg)
 
 
+# Exact allocator output per (traced workload, maxregcount) — pinned when
+# frontend/regalloc dropped its private `_live_intervals` in favor of the
+# core liveness pass via the pipeline (ISSUE 5): the refactor must not move
+# a single spill.  Format: (regs_per_thread, spills, spill_loads, spill_stores)
+REGALLOC_GOLDEN = {
+    ("traced_matmul", 64): (29, 0, 0, 0),
+    ("traced_matmul", 24): (22, 9, 19, 17),
+    ("traced_attention", 64): (30, 0, 0, 0),
+    ("traced_attention", 24): (22, 17, 38, 32),
+    ("traced_ssd", 64): (23, 0, 0, 0),
+    ("traced_ssd", 24): (23, 0, 0, 0),
+    ("traced_rmsnorm", 64): (8, 0, 0, 0),
+    ("traced_rmsnorm", 24): (8, 0, 0, 0),
+    ("traced_mlp", 64): (31, 0, 0, 0),
+    ("traced_mlp", 24): (22, 18, 46, 31),
+    ("traced_attn_layer", 64): (36, 0, 0, 0),
+    ("traced_attn_layer", 24): (23, 23, 48, 38),
+}
+
+
+@pytest.mark.parametrize("name", TRACED_NAMES)
+def test_regalloc_output_pinned_on_traced_suite(name):
+    """Regression pin for the liveness dedup: `allocate_registers` through
+    the core pipeline's liveness pass produces exactly the pre-refactor
+    spill counts and register demands on the whole traced suite."""
+    from repro.frontend.jaxpr_lift import lift_fn
+    from repro.frontend.workloads import TRACED_SPECS
+
+    spec = TRACED_SPECS[name]
+    fn, args = spec.builder()
+    lifted = lift_fn(fn, args, name=name, while_trips=spec.while_trips)
+    for mrc in (64, 24):
+        a = allocate_registers(lifted.prog, maxregcount=mrc)
+        got = (a.regs_per_thread, a.spill_count, a.spill_loads,
+               a.spill_stores)
+        assert got == REGALLOC_GOLDEN[(name, mrc)], (name, mrc, got)
+
+
+def test_regalloc_has_no_private_liveness():
+    """The frontend must reuse `repro.core.liveness` through the pipeline —
+    the duplicated `_live_intervals` implementation is gone for good."""
+    from repro.frontend import regalloc
+
+    assert not hasattr(regalloc, "_live_intervals")
+    import inspect
+    src = inspect.getsource(regalloc)
+    assert "frontend_passes" in src and "back_edges" not in src
+
+
 def test_regalloc_no_spill_for_small_programs():
     prog = parse_asm("""
         mov r0, 1

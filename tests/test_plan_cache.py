@@ -76,6 +76,47 @@ def test_cached_passes_match_direct_results():
     assert rr is cached_renumber(prog, 8, 16)
 
 
+def test_analysis_caches_key_on_interval_grouping():
+    """Two analyses over the SAME split program with the same cap and the
+    same interval *count* but different block groupings must not collide in
+    the prefetch/ICG caches (reachable via custom interval strategies)."""
+    from repro.core.intervals import Interval, IntervalAnalysis
+
+    prog = parse_asm("""
+        mov r0, 1
+        bra B
+    B:  add r1, r0, r0
+        bra C
+    C:  add r2, r1, r1
+        exit
+    """, name="grouping")
+    a_label = prog.order[0]
+
+    def grouped(pairs):
+        intervals = [Interval(iid=i, header=blocks[0], blocks=list(blocks),
+                              working_set=set().union(
+                                  *(prog.blocks[b].refs() for b in blocks)))
+                     for i, blocks in enumerate(pairs)]
+        bi = {b: iv.iid for iv in intervals for b in iv.blocks}
+        return IntervalAnalysis(prog=prog, intervals=intervals,
+                                block_interval=bi, n_cap=8)
+
+    an1 = grouped([(a_label, "B"), ("C",)])
+    an2 = grouped([(a_label,), ("B", "C")])
+    ops1 = cached_prefetch_ops(an1, 16)
+    ops2 = cached_prefetch_ops(an2, 16)
+    assert ops1 is not ops2
+    assert ops1[0].bitvector != ops2[0].bitvector
+    # ...and neither must analyses with identical grouping whose working
+    # sets differ (e.g. a liveness-trimming custom strategy)
+    an3 = grouped([(a_label, "B"), ("C",)])
+    for iv in an3.intervals:
+        iv.working_set = {min(iv.working_set)}
+    ops3 = cached_prefetch_ops(an3, 16)
+    assert ops3 is not ops1
+    assert ops3[0].bitvector == frozenset({min(ops1[0].bitvector)})
+
+
 def test_cache_clear_resets():
     prog = parse_asm(ASM, name="clear-me")
     cached_intervals(prog, 8)
