@@ -38,6 +38,9 @@ Usage::
                                                 # only (CI)
     python -m benchmarks.bench_sim --interval-smoke  # interval-strategy
                                                 # ablation only (CI)
+    python -m benchmarks.bench_sim --chaos-smoke  # sweep under injected
+                                                # faults: crash + hang +
+                                                # transient + corrupt (CI)
     python -m benchmarks.bench_sim --suite traced   # sweep the lifted
                                                 # real kernels (untracked)
     python -m benchmarks.bench_sim --baseline   # re-measure the golden
@@ -48,8 +51,10 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import pathlib
 import sys
+import tempfile
 import time
 
 from benchmarks.orchestrator import SimRunner, default_processes
@@ -227,6 +232,91 @@ def measure_interval_sweep(processes=None, suite: str | None = None) -> dict:
     }
 
 
+def measure_chaos_sweep(processes: int | None = None) -> dict:
+    """The fault-tolerance acceptance sweep (CI's ``--chaos-smoke`` step).
+
+    Runs a 56-job sweep into a throwaway cache dir under a deterministic
+    fault plan (`repro.serving.faults`) injecting one worker crash, one
+    worker hang, one twice-firing transient raise, and one corrupt cache
+    write — then replays the sweep with faults off so the torn cache entry
+    hits the quarantine path.  The report carries pass/fail verdicts; the
+    CLI exits non-zero if any verdict fails, so a fault-tolerance
+    regression fails the CI step rather than hiding in the artifact."""
+    from repro.serving.faults import ENV_PLAN
+    from repro.serving.sweep import SweepConfig
+    from repro.sim import SimConfig
+
+    procs = max(2, processes if processes is not None
+                else min(default_processes(), 4))
+    workloads = ("kmeans", "bfs", "nw", "srad")
+    transient_job = "bfs/BL/seed0"
+    crash_job = "kmeans/LTRF/seed1"      # runs early: recycle happens first
+    hang_job = "srad/LTRF/seed6"         # runs late: hits its own timeout
+    corrupt_job = "nw/BL/seed3"
+    jobs = [(n, SimConfig(design=d, num_warps=4, seed=s))
+            for n in workloads for d in ("BL", "LTRF") for s in range(7)]
+
+    tmp = pathlib.Path(tempfile.mkdtemp(prefix="chaos_smoke_"))
+    plan_path = tmp / "fault_plan.json"
+    plan_path.write_text(json.dumps({"faults": [
+        {"match": transient_job, "action": "raise", "times": 2},
+        {"match": crash_job, "action": "exit", "times": 1},
+        {"match": hang_job, "action": "hang", "seconds": 120, "times": 1},
+        {"match": corrupt_job, "stage": "store", "action": "corrupt",
+         "times": 1},
+    ]}))
+    cache_dir = tmp / "simcache"
+    sweep_cfg = SweepConfig(max_attempts=3, backoff_base_s=0.05,
+                            job_timeout_s=10.0)
+    saved = os.environ.get(ENV_PLAN)
+    t0 = time.time()
+    try:
+        os.environ[ENV_PLAN] = str(plan_path)
+        chaos = SimRunner(processes=procs, cache_dir=cache_dir,
+                          sweep=sweep_cfg)
+        rep = chaos.prefill(jobs)
+    finally:
+        if saved is None:
+            os.environ.pop(ENV_PLAN, None)
+        else:
+            os.environ[ENV_PLAN] = saved
+    # replay with faults off: the torn entry must quarantine, not replay
+    replay = SimRunner(processes=procs, cache_dir=cache_dir, sweep=sweep_cfg)
+    rep2 = replay.prefill(jobs)
+    wall = time.time() - t0
+
+    kinds = rep.retry_kinds
+    verdicts = {
+        "chaos_sweep_completed": rep.ok and rep.completed == rep.total,
+        "transient_retried_with_backoff":
+            kinds.get(transient_job, []).count("transient") == 2,
+        "crash_recovered_via_pool_recycle":
+            rep.pool_recycles >= 1 and "crash" in kinds.get(crash_job, []),
+        "hang_recovered":  # normally its own timeout; "crash" if the hung
+                           # worker died in a concurrent pool recycle
+            any(k in ("timeout", "crash") for k in kinds.get(hang_job, [])),
+        "no_unexpected_retries": all(
+            label in (transient_job, crash_job, hang_job)
+            or set(ks) == {"crash"}  # innocent neighbors of the pool break
+            for label, ks in kinds.items()),
+        "corrupt_entry_quarantined":
+            [q.job for q in rep2.quarantined] == [corrupt_job]
+            and replay.stats["quarantined"] == 1,
+        "replay_clean": rep2.ok and rep2.completed == rep2.total,
+    }
+    return {
+        "processes": procs,
+        "sims": len(jobs),
+        "wall_s": round(wall, 2),
+        "injected": {"transient": transient_job, "crash": crash_job,
+                     "hang": hang_job, "corrupt": corrupt_job},
+        "chaos_report": rep.to_dict(),
+        "replay_report": rep2.to_dict(),
+        "verdicts": verdicts,
+        "all_verdicts_pass": all(verdicts.values()),
+    }
+
+
 def measure_golden_serial(jobs) -> dict:
     from repro.sim.golden import golden_simulate
     t0 = time.time()
@@ -302,6 +392,11 @@ def main(argv=None) -> None:
     ap.add_argument("--interval-smoke", action="store_true",
                     help="run only the interval-formation-strategy "
                          "ablation sweep (CI interval smoke)")
+    ap.add_argument("--chaos-smoke", action="store_true",
+                    help="run a small sweep under injected faults (crash + "
+                         "hang + transient + corrupt cache entry) and "
+                         "verify the SweepReport; exits non-zero on any "
+                         "failed verdict (CI chaos smoke)")
     ap.add_argument("--procs", type=int, default=None)
     args = ap.parse_args(argv)
     if args.gpu_smoke:
@@ -316,6 +411,14 @@ def main(argv=None) -> None:
         report = measure_interval_sweep(processes=args.procs,
                                         suite=args.suite)
         print(json.dumps(report, indent=1))
+        return
+    if args.chaos_smoke:
+        report = measure_chaos_sweep(processes=args.procs)
+        print(json.dumps(report, indent=1))
+        if not report["all_verdicts_pass"]:
+            failed = [k for k, v in report["verdicts"].items() if not v]
+            print(f"# chaos smoke FAILED: {failed}", file=sys.stderr)
+            sys.exit(1)
         return
     if args.baseline:
         report = measure_golden_serial(sweep_jobs())

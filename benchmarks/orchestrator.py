@@ -1,171 +1,22 @@
-"""Parallel sweep orchestrator for the SM performance model.
+"""Parallel sweep orchestrator — thin delegate to the sweep service.
 
-The paper-figure sweeps are thousands of independent, deterministic
-simulations; this module gives them three fast-path layers:
-
-* an **in-process memo** keyed by (workload, SimConfig) — figure functions
-  freely re-request the same normalization baselines without re-simulating;
-* an **on-disk artifact cache** under ``experiments/paper/simcache/`` so a
-  re-run of the benchmark harness replays results instead of simulations;
-* a **process-pool prefill** (`SimRunner.prefill`) that executes the missing
-  jobs of a sweep across cores before the figure code consumes them.
-
-Results are exact `SimResult` counters — simulations are deterministic, so
-both cache layers are sound (the golden-equivalence suite pins the engine).
+The actual implementation lives in `repro.serving.sweep`: a fault-tolerant
+future-per-job dispatcher (worker-crash recovery, bounded retries with
+exponential backoff, per-job wall-clock timeouts) over a checksummed,
+quarantine-capable on-disk result store.  This module keeps the historical
+``benchmarks.orchestrator`` entry point alive for the benchmark harness and
+existing scripts; new code should import from `repro.serving` directly.
 """
 from __future__ import annotations
 
-import hashlib
-import json
-import os
-import pathlib
-from concurrent.futures import ProcessPoolExecutor
-from dataclasses import asdict
+from repro.serving.sweep import (
+    FAILURE_KINDS, ROOT, SIMCACHE, FailureRecord, Job, ResultStore,
+    SimRunner, SweepConfig, SweepReport, _run_job, default_processes,
+    default_runner, job_label, sim_key,
+)
 
-from repro.sim import SimConfig, SimResult, simulate
-from repro.sim.engine import ENGINE_REV
-from repro.sim.gpu import GpuResult, aggregate, per_sm_configs
-from repro.workloads import get_workload
-
-ROOT = pathlib.Path(__file__).resolve().parent.parent
-SIMCACHE = ROOT / "experiments" / "paper" / "simcache"
-
-Job = tuple[str, SimConfig]
-
-
-def sim_key(workload: str, cfg: SimConfig) -> str:
-    """Stable on-disk key for one simulation job.
-
-    ENGINE_REV is part of the key: when the engine's counters intentionally
-    change, old cache entries become unreachable instead of silently mixing
-    two engine behaviors into one sweep."""
-    payload = json.dumps([ENGINE_REV, workload, asdict(cfg)], sort_keys=True)
-    return hashlib.sha1(payload.encode()).hexdigest()[:20]
-
-
-def _run_job(job: Job) -> tuple[str, SimConfig, dict]:
-    name, cfg = job
-    # get_workload resolves lazy suites (e.g. traced kernels) in pool workers
-    res = simulate(get_workload(name), cfg)
-    return name, cfg, asdict(res)
-
-
-def default_processes() -> int:
-    env = os.environ.get("REPRO_SIM_PROCS")
-    if env:
-        return max(1, int(env))
-    return max(1, os.cpu_count() or 1)
-
-
-class SimRunner:
-    """Memoizing, optionally parallel and disk-backed simulation runner."""
-
-    def __init__(self, processes: int | None = None,
-                 disk_cache: bool = True,
-                 cache_dir: pathlib.Path | None = None) -> None:
-        self.processes = processes if processes is not None else default_processes()
-        self.disk_cache = disk_cache
-        self.cache_dir = cache_dir or SIMCACHE
-        self._memo: dict[Job, SimResult] = {}
-        self.stats = {"memo_hits": 0, "disk_hits": 0, "computed": 0}
-
-    # -- cache layers ------------------------------------------------------
-    def _disk_path(self, job: Job) -> pathlib.Path:
-        return self.cache_dir / f"{sim_key(*job)}.json"
-
-    def _disk_load(self, job: Job) -> SimResult | None:
-        if not self.disk_cache:
-            return None
-        p = self._disk_path(job)
-        if not p.exists():
-            return None
-        try:
-            return SimResult(**json.loads(p.read_text()))
-        except (ValueError, TypeError):
-            return None  # corrupt/stale entry: recompute
-
-    def _disk_store(self, job: Job, res: SimResult) -> None:
-        if not self.disk_cache:
-            return
-        self.cache_dir.mkdir(parents=True, exist_ok=True)
-        p = self._disk_path(job)
-        tmp = p.with_suffix(f".tmp{os.getpid()}")
-        tmp.write_text(json.dumps(asdict(res)))
-        tmp.replace(p)  # atomic: concurrent runs race benignly
-
-    def _lookup(self, job: Job) -> SimResult | None:
-        res = self._memo.get(job)
-        if res is not None:
-            self.stats["memo_hits"] += 1
-            return res
-        res = self._disk_load(job)
-        if res is not None:
-            self.stats["disk_hits"] += 1
-            self._memo[job] = res
-        return res
-
-    # -- public API --------------------------------------------------------
-    def sim(self, workload, cfg: SimConfig) -> SimResult:
-        """One simulation through the memo/disk cache (inline on miss)."""
-        name = workload if isinstance(workload, str) else workload.name
-        job = (name, cfg)
-        res = self._lookup(job)
-        if res is None:
-            self.stats["computed"] += 1
-            res = simulate(get_workload(name), cfg)
-            self._memo[job] = res
-            self._disk_store(job, res)
-        return res
-
-    def sim_gpu(self, workload, cfg: SimConfig) -> GpuResult:
-        """One whole-GPU simulation: the per-SM jobs go through the memo /
-        disk cache (and the pool, if several SMs miss), then aggregate.
-
-        GPU sweeps therefore reuse the compile cache across SMs (the per-SM
-        configs only differ in warp share / seed / DRAM interval, none of
-        which key the compiler passes) and replay per-SM results from disk.
-        """
-        name = workload if isinstance(workload, str) else workload.name
-        jobs = [(name, c) for c in per_sm_configs(cfg)]
-        self.prefill(jobs)
-        return aggregate(cfg, [self.sim(*job) for job in jobs], name)
-
-    def prefill_gpu(self, jobs: list[Job]) -> None:
-        """Expand whole-GPU jobs into their per-SM jobs and prefill those."""
-        self.prefill([(name, c) for name, cfg in jobs
-                      for c in per_sm_configs(cfg)])
-
-    def prefill(self, jobs: list[Job]) -> None:
-        """Execute all cache-missing jobs, across the process pool."""
-        misses: list[Job] = []
-        seen: set[Job] = set()
-        for job in jobs:
-            if job in seen:
-                continue
-            seen.add(job)
-            if self._lookup(job) is None:
-                misses.append(job)
-        if not misses:
-            return
-        if self.processes <= 1 or len(misses) == 1:
-            for job in misses:
-                self.sim(*job)
-            return
-        self.stats["computed"] += len(misses)
-        chunk = max(1, len(misses) // (self.processes * 4))
-        with ProcessPoolExecutor(max_workers=self.processes) as pool:
-            for name, cfg, d in pool.map(_run_job, misses, chunksize=chunk):
-                res = SimResult(**d)
-                self._memo[(name, cfg)] = res
-                self._disk_store((name, cfg), res)
-
-
-_DEFAULT: SimRunner | None = None
-
-
-def default_runner() -> SimRunner:
-    """Process-wide shared runner (memo survives across figure functions)."""
-    global _DEFAULT
-    if _DEFAULT is None:
-        _DEFAULT = SimRunner()
-    return _DEFAULT
+__all__ = [
+    "FAILURE_KINDS", "ROOT", "SIMCACHE", "FailureRecord", "Job",
+    "ResultStore", "SimRunner", "SweepConfig", "SweepReport",
+    "default_processes", "default_runner", "job_label", "sim_key",
+]

@@ -61,9 +61,30 @@ def _cached(name: str, fn):
     return out
 
 
+# Design points a fault-tolerant prefill could not complete in this process
+# (FailureRecords from repro.serving.sweep) — the annotated "missing points"
+# of a degraded sweep.  Figure code that still sim()s one of them recomputes
+# inline (and surfaces the underlying error); `sweep_health()` reports them.
+MISSING_POINTS: list = []
+
+
 def _prefill(jobs) -> None:
-    RUNNER.prefill([(w if isinstance(w, str) else w.name, cfg)
-                    for w, cfg in jobs])
+    report = RUNNER.prefill([(w if isinstance(w, str) else w.name, cfg)
+                             for w, cfg in jobs])
+    if not report.ok:
+        MISSING_POINTS.extend(report.failed)
+
+
+def sweep_health() -> dict:
+    """Degradation summary across every figure sweep run so far: the missing
+    design points (per-job FailureRecords) and the shared runner's
+    retry/quarantine counters.  `benchmarks.run` prints a warning when
+    ``ok`` is false so a degraded artifact set never passes silently."""
+    return {
+        "ok": not MISSING_POINTS and not RUNNER.stats["quarantined"],
+        "missing_points": [f.to_dict() for f in MISSING_POINTS],
+        "runner_stats": dict(RUNNER.stats),
+    }
 
 
 def _prefill_tolerance(pairs, num_warps: int = 64, loss: float = 0.05) -> None:

@@ -31,12 +31,22 @@ def _fmt(v):
 
 
 def bench_paper_figures() -> None:
-    from benchmarks.paper_figs import ALL_FIGS
+    from benchmarks.paper_figs import ALL_FIGS, sweep_health
     for name, fn in ALL_FIGS.items():
         t0 = time.time()
         rows = fn()
         _emit(name, rows)
         print(f"# {name}: {time.time() - t0:.1f}s", file=sys.stderr)
+    health = sweep_health()
+    if not health["ok"]:
+        # degraded sweep: some design points failed/quarantined (see
+        # repro.serving.sweep) — say so rather than pass silently
+        print(f"# WARNING: sweep degraded: "
+              f"{len(health['missing_points'])} missing point(s), "
+              f"runner stats {health['runner_stats']}", file=sys.stderr)
+        for mp in health["missing_points"]:
+            print(f"#   missing: {mp['job']} [{mp['kind']}] {mp['detail']}",
+                  file=sys.stderr)
 
 
 def bench_sim_sweep(suite: str | None = None) -> None:

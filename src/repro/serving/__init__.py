@@ -1,6 +1,13 @@
 from .allocator import AddressAllocationUnit
 from .scheduler import PAGE_TOKENS, Request, TwoLevelScheduler
 from .engine import ServeConfig, ServingEngine
+from .sweep import (
+    FAILURE_KINDS, FailureRecord, ResultStore, SimRunner, SweepConfig,
+    SweepReport, default_processes, default_runner, job_label, sim_key,
+)
 
 __all__ = ["AddressAllocationUnit", "PAGE_TOKENS", "Request",
-           "TwoLevelScheduler", "ServeConfig", "ServingEngine"]
+           "TwoLevelScheduler", "ServeConfig", "ServingEngine",
+           "FAILURE_KINDS", "FailureRecord", "ResultStore", "SimRunner",
+           "SweepConfig", "SweepReport", "default_processes",
+           "default_runner", "job_label", "sim_key"]

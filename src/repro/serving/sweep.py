@@ -1,0 +1,772 @@
+"""Fault-tolerant sweep service: the orchestration layer behind the sweeps.
+
+The paper's subject is latency *tolerance* — overlapping long-latency
+operations instead of stalling on them — and this module applies the same
+discipline to the sweep infrastructure itself.  The original
+``benchmarks.orchestrator`` died on its first fault: one crashed pool
+worker aborted a whole ``prefill`` with `BrokenProcessPool`, a hung
+simulation blocked a sweep forever, and a corrupt cache entry was silently
+recomputed with no record.  This layer survives all of them:
+
+* **future-per-job dispatch** — every job is its own future; a broken
+  process pool is recycled and only the jobs that were actually in flight
+  are re-examined (each suspect is then probed *serially*, so a genuine
+  crasher is charged its attempt while innocent bystanders are retried for
+  free — the `SweepReport` names exactly the faulty jobs);
+* **bounded retries with exponential backoff** — transient failures
+  (exceptions, worker crashes, timeouts) are retried up to
+  `SweepConfig.max_attempts` times, waiting
+  ``backoff_base_s * backoff_factor**(attempt-1)`` (capped at
+  ``backoff_max_s``) between attempts;
+* **per-job wall-clock timeouts** — a job that exceeds
+  `SweepConfig.job_timeout_s` has its pool recycled (the hung worker is
+  killed) and is charged a ``timeout`` attempt.  The in-band counterpart is
+  the `SimConfig.max_cycles` watchdog (`SweepConfig.watchdog_max_cycles`
+  applies it sweep-wide): runaway configs raise a structured
+  `repro.sim.SimBudgetExceeded` instead of spinning;
+* **a checksummed, content-addressed result store** — cache entries are
+  ``{"v", "key", "sha256", "payload"}`` envelopes; truncated, torn,
+  wrong-schema, or bit-rotted entries are detected on load, *quarantined*
+  under ``simcache/quarantine/`` next to a structured ``*.failure.json``
+  record, and recomputed — never silently trusted or silently dropped;
+* **graceful degradation** — `SimRunner.prefill` returns a `SweepReport`
+  (completed / retried / failed / quarantined, per job) instead of raising,
+  so `benchmarks.bench_sim` and `benchmarks.paper_figs` can finish a sweep
+  with annotated missing points rather than crashing.
+
+The deterministic chaos harness that exercises all of this lives in
+`repro.serving.faults`; `tests/test_sweep_faults.py` is the suite.
+"""
+from __future__ import annotations
+
+import heapq
+import json
+import hashlib
+import os
+import pathlib
+import time
+from concurrent.futures import (
+    FIRST_COMPLETED, Future, ProcessPoolExecutor, wait,
+)
+from concurrent.futures.process import BrokenProcessPool
+from dataclasses import asdict, dataclass, field, replace
+
+from repro.core.pipeline import PIPELINE_REV
+from repro.core.plan_cache import PLAN_REV
+from repro.serving import faults
+from repro.sim import SimBudgetExceeded, SimConfig, SimResult, simulate
+from repro.sim.engine import ENGINE_REV
+from repro.sim.gpu import GpuResult, aggregate, per_sm_configs
+from repro.workloads import get_workload
+
+ROOT = pathlib.Path(__file__).resolve().parents[3]
+SIMCACHE = pathlib.Path(os.environ.get(
+    "REPRO_SIMCACHE", ROOT / "experiments" / "paper" / "simcache"))
+
+Job = tuple[str, SimConfig]
+
+# Failure/retry classification (FailureRecord.kind):
+#   transient - the job raised an ordinary exception (incl. injected faults)
+#   crash     - the job's worker process died (BrokenProcessPool)
+#   timeout   - the job exceeded SweepConfig.job_timeout_s wall-clock
+#   budget    - the simulation raised SimBudgetExceeded (deterministic:
+#               never retried, retrying cannot change the outcome)
+#   corrupt   - a cache entry failed validation and was quarantined
+FAILURE_KINDS = ("transient", "crash", "timeout", "budget", "corrupt")
+_RETRIABLE = frozenset({"transient", "crash", "timeout"})
+
+STORE_VERSION = 1
+
+
+def job_label(job: Job) -> str:
+    """Human-stable job identity used in reports and fault-plan matching."""
+    name, cfg = job
+    return f"{name}/{cfg.design}/seed{cfg.seed}"
+
+
+def sim_key(workload: str, cfg: SimConfig) -> str:
+    """Stable on-disk key for one simulation job.
+
+    The full revision triple is part of the key — ENGINE_REV for the
+    engine's counters, PLAN_REV/PIPELINE_REV for the compiler passes that
+    shape what the engine simulates — so a behavioral change on *either*
+    side makes old cache entries unreachable instead of silently mixing two
+    behaviors into one sweep.  ``max_cycles`` is excluded: the watchdog can
+    only abort a simulation (raising `SimBudgetExceeded`), never change a
+    completed result, so budgeted and unbudgeted runs share entries."""
+    cfg_payload = asdict(cfg)
+    cfg_payload.pop("max_cycles", None)
+    payload = json.dumps([[ENGINE_REV, PLAN_REV, PIPELINE_REV],
+                          workload, cfg_payload], sort_keys=True)
+    return hashlib.sha1(payload.encode()).hexdigest()[:20]
+
+
+def default_processes() -> int:
+    env = os.environ.get("REPRO_SIM_PROCS")
+    if env:
+        return max(1, int(env))
+    return max(1, os.cpu_count() or 1)
+
+
+# --------------------------------------------------------------------------
+# Sweep configuration + report
+
+@dataclass(frozen=True)
+class SweepConfig:
+    """Fault-tolerance knobs for one sweep (see docs/serving.md)."""
+    max_attempts: int = 3          # total tries per job (1 = no retry)
+    backoff_base_s: float = 0.05   # wait before attempt 2
+    backoff_factor: float = 2.0    # growth per further attempt
+    backoff_max_s: float = 2.0     # backoff ceiling
+    job_timeout_s: float | None = None   # per-job wall clock (None = off)
+    watchdog_max_cycles: int = 0   # SimConfig.max_cycles applied sweep-wide
+                                   # to jobs that don't set their own
+
+
+@dataclass
+class FailureRecord:
+    """One structured failure event (a job's final failure, or a
+    quarantined cache entry)."""
+    job: str
+    workload: str
+    design: str
+    kind: str                      # one of FAILURE_KINDS
+    detail: str = ""
+    attempts: int = 0
+    key: str = ""
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+@dataclass
+class SweepReport:
+    """What happened to every job of one `SimRunner.prefill` call."""
+    total: int = 0                 # unique jobs requested
+    cached: int = 0                # served from memo/disk before dispatch
+    computed: int = 0              # simulated this call
+    completed: int = 0             # jobs with a result available at the end
+    retried: dict[str, int] = field(default_factory=dict)  # label -> retries
+    retry_kinds: dict[str, list[str]] = field(default_factory=dict)
+    failed: list[FailureRecord] = field(default_factory=list)
+    quarantined: list[FailureRecord] = field(default_factory=list)
+    pool_recycles: int = 0
+    tmp_files_removed: int = 0
+    wall_s: float = 0.0
+
+    @property
+    def ok(self) -> bool:
+        return not self.failed
+
+    def failed_jobs(self) -> list[str]:
+        return [r.job for r in self.failed]
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["ok"] = self.ok
+        return d
+
+
+# --------------------------------------------------------------------------
+# Content-addressed result store (checksums + quarantine + tmp GC)
+
+class ResultStore:
+    """On-disk result store with integrity checking.
+
+    Entries are JSON envelopes ``{"v": 1, "key": ..., "sha256": ...,
+    "payload": {...}}`` written atomically (tmp file + rename).  ``load``
+    never returns questionable data: any entry that is unreadable,
+    truncated, mis-keyed, checksum-mismatched, or schema-invalid is moved
+    to ``<root>/quarantine/`` with a ``<key>.failure.json`` record and
+    reported as a miss, so the caller recomputes *and* the corruption is
+    visible in `SimRunner.stats` / `SweepReport.quarantined`."""
+
+    def __init__(self, root: pathlib.Path) -> None:
+        self.root = pathlib.Path(root)
+        self.quarantine_dir = self.root / "quarantine"
+        self.quarantines: list[FailureRecord] = []
+        self.stats = {"hits": 0, "misses": 0, "stores": 0,
+                      "quarantined": 0, "tmp_gc": 0}
+
+    def path(self, key: str) -> pathlib.Path:
+        return self.root / f"{key}.json"
+
+    # -- write -------------------------------------------------------------
+    @staticmethod
+    def _digest(payload: dict) -> str:
+        canon = json.dumps(payload, sort_keys=True).encode()
+        return hashlib.sha256(canon).hexdigest()
+
+    def store(self, key: str, payload: dict, label: str = "") -> None:
+        entry = {"v": STORE_VERSION, "key": key,
+                 "sha256": self._digest(payload), "payload": payload}
+        self.root.mkdir(parents=True, exist_ok=True)
+        p = self.path(key)
+        tmp = p.with_suffix(f".tmp{os.getpid()}")
+        tmp.write_text(json.dumps(entry))
+        faults.fault_point("store", label or key, path=tmp)
+        tmp.replace(p)  # atomic: concurrent runs race benignly
+        self.stats["stores"] += 1
+
+    # -- read --------------------------------------------------------------
+    def load(self, key: str, label: str = "") -> dict | None:
+        """The validated payload for ``key``, or None (miss/quarantined)."""
+        p = self.path(key)
+        if not p.exists():
+            self.stats["misses"] += 1
+            return None
+        reason = None
+        entry = None
+        try:
+            entry = json.loads(p.read_text())
+        except (ValueError, OSError) as e:
+            reason = f"unparseable JSON ({e})"
+        if reason is None:
+            reason = self._validate(entry, key)
+        if reason is not None:
+            self.quarantine(key, reason, label=label)
+            self.stats["misses"] += 1
+            return None
+        self.stats["hits"] += 1
+        return entry["payload"]
+
+    @classmethod
+    def _validate(cls, entry, key: str) -> str | None:
+        if not isinstance(entry, dict):
+            return f"entry is {type(entry).__name__}, not an envelope"
+        missing = {"v", "key", "sha256", "payload"} - entry.keys()
+        if missing:
+            return f"envelope missing fields {sorted(missing)}"
+        if entry["v"] != STORE_VERSION:
+            return f"unknown store version {entry['v']!r}"
+        if entry["key"] != key:
+            return f"entry is keyed {entry['key']!r}, expected {key!r}"
+        if not isinstance(entry["payload"], dict):
+            return "payload is not an object"
+        if cls._digest(entry["payload"]) != entry["sha256"]:
+            return "payload checksum mismatch"
+        return None
+
+    # -- quarantine --------------------------------------------------------
+    def quarantine(self, key: str, reason: str, label: str = "") -> None:
+        """Move ``key``'s entry out of the cache and record why."""
+        p = self.path(key)
+        self.quarantine_dir.mkdir(parents=True, exist_ok=True)
+        size = p.stat().st_size if p.exists() else 0
+        if p.exists():
+            p.replace(self.quarantine_dir / p.name)
+        record = {"key": key, "job": label, "reason": reason,
+                  "size_bytes": size, "quarantined_at": time.time(),
+                  "quarantined_from": str(p)}
+        (self.quarantine_dir / f"{key}.failure.json").write_text(
+            json.dumps(record, indent=1))
+        workload, _, rest = label.partition("/")
+        design, _, _ = rest.partition("/")
+        self.quarantines.append(FailureRecord(
+            job=label or key, workload=workload, design=design,
+            kind="corrupt", detail=reason, key=key))
+        self.stats["quarantined"] += 1
+
+    # -- tmp-file GC -------------------------------------------------------
+    def gc_stale_tmp(self, max_age_s: float = 3600.0) -> int:
+        """Remove tmp files abandoned by crashed writers.
+
+        Writers publish via ``<key>.tmp<pid>`` + rename; a writer that dies
+        mid-write leaks its tmp file forever.  A tmp file is stale when its
+        writer pid no longer exists, or (pid unparseable / recycled) when it
+        is older than ``max_age_s``.  Called at sweep startup."""
+        removed = 0
+        if not self.root.is_dir():
+            return 0
+        now = time.time()
+        for tmp in self.root.glob("*.tmp*"):
+            pid_s = tmp.suffix[len(".tmp"):]
+            stale = False
+            if pid_s.isdigit() and int(pid_s) != os.getpid():
+                stale = not _pid_alive(int(pid_s))
+            if not stale:
+                try:
+                    stale = now - tmp.stat().st_mtime > max_age_s
+                except OSError:
+                    continue  # raced with a concurrent publish
+            if stale:
+                try:
+                    tmp.unlink()
+                    removed += 1
+                except OSError:
+                    pass
+        self.stats["tmp_gc"] += removed
+        return removed
+
+
+def _pid_alive(pid: int) -> bool:
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except (PermissionError, OverflowError):
+        return True  # exists (another user's), or out of range: be cautious
+    return True
+
+
+# --------------------------------------------------------------------------
+# Pool worker entry point (module-level: must pickle by reference)
+
+def _run_job(job: Job, watchdog_max_cycles: int = 0) -> tuple[str, SimConfig, dict]:
+    name, cfg = job
+    faults.fault_point("run", job_label(job))
+    run_cfg = cfg
+    if watchdog_max_cycles and not cfg.max_cycles:
+        run_cfg = replace(cfg, max_cycles=watchdog_max_cycles)
+    # get_workload resolves lazy suites (e.g. traced kernels) in pool workers
+    res = simulate(get_workload(name), run_cfg)
+    return name, cfg, asdict(res)
+
+
+# --------------------------------------------------------------------------
+# The dispatcher
+
+@dataclass
+class _JobState:
+    job: Job
+    attempts: int = 0
+    retries: list[str] = field(default_factory=list)
+    failure: FailureRecord | None = None
+    done: bool = False
+
+
+class _Dispatcher:
+    """Future-per-job process-pool dispatcher with retry/timeout/recycle."""
+
+    def __init__(self, processes: int, sweep: SweepConfig, on_success) -> None:
+        self.processes = processes
+        self.cfg = sweep
+        self.on_success = on_success
+        self.pool: ProcessPoolExecutor | None = None
+        self.pool_recycles = 0
+
+    # -- pool lifecycle ----------------------------------------------------
+    def _fresh_pool(self) -> ProcessPoolExecutor:
+        if self.pool is None:
+            self.pool = ProcessPoolExecutor(max_workers=self.processes)
+        return self.pool
+
+    def _kill_pool(self) -> None:
+        """Tear the pool down even if workers are hung or dead."""
+        pool = self.pool
+        self.pool = None
+        if pool is None:
+            return
+        self.pool_recycles += 1
+        procs = list(getattr(pool, "_processes", {}).values())
+        try:
+            pool.shutdown(wait=False, cancel_futures=True)
+        except Exception:
+            pass
+        for p in procs:
+            try:
+                p.terminate()
+            except Exception:
+                pass
+        for p in procs:
+            try:
+                p.join(timeout=5)
+            except Exception:
+                pass
+
+    # -- bookkeeping -------------------------------------------------------
+    def _backoff(self, attempts: int) -> float:
+        c = self.cfg
+        return min(c.backoff_max_s,
+                   c.backoff_base_s * c.backoff_factor ** max(attempts - 1, 0))
+
+    def _charge(self, st: _JobState, kind: str, detail: str) -> bool:
+        """Record one failed attempt; True if the job will be retried."""
+        st.attempts += 1
+        retry = kind in _RETRIABLE and st.attempts < self.cfg.max_attempts
+        if retry:
+            st.retries.append(kind)
+            return True
+        name, cfg = st.job
+        st.failure = FailureRecord(
+            job=job_label(st.job), workload=name, design=cfg.design,
+            kind=kind, detail=detail, attempts=st.attempts,
+            key=sim_key(name, cfg))
+        st.done = True
+        return False
+
+    def _classify(self, exc: BaseException) -> tuple[str, str]:
+        if isinstance(exc, BrokenProcessPool):
+            return "crash", "worker process died (BrokenProcessPool)"
+        if isinstance(exc, SimBudgetExceeded):
+            return "budget", str(exc)
+        return "transient", f"{type(exc).__name__}: {exc}"
+
+    def _succeed(self, st: _JobState, payload: dict) -> None:
+        self.on_success(st.job, payload)
+        st.done = True
+
+    # -- serial suspect probe ---------------------------------------------
+    def _probe(self, st: _JobState, ready, now_seq) -> None:
+        """Run one pool-break suspect alone to attribute the crash exactly.
+
+        When a worker dies, every in-flight job fails with
+        `BrokenProcessPool` — the culprit is unknown.  Probing each suspect
+        serially (one job in flight in a fresh pool) makes the next break
+        unambiguous: only the actual crasher is charged a ``crash``
+        attempt; innocent bystanders complete here for free."""
+        deadline = (time.monotonic() + self.cfg.job_timeout_s
+                    if self.cfg.job_timeout_s else None)
+        try:
+            fut = self._fresh_pool().submit(
+                _run_job, st.job, self.cfg.watchdog_max_cycles)
+        except BrokenProcessPool:
+            self._kill_pool()
+            if self._charge(st, "crash", "pool broke on submit"):
+                self._requeue(st, ready, now_seq)
+            return
+        timeout = None if deadline is None else max(
+            deadline - time.monotonic(), 0.0)
+        done, _ = wait([fut], timeout=timeout)
+        if not done:  # the suspect hangs: kill it, charge a timeout
+            self._kill_pool()
+            if self._charge(st, "timeout",
+                            f"exceeded job_timeout_s="
+                            f"{self.cfg.job_timeout_s}s (serial probe)"):
+                self._requeue(st, ready, now_seq)
+            return
+        exc = fut.exception()
+        if exc is None:
+            self._succeed(st, fut.result()[2])
+            return
+        kind, detail = self._classify(exc)
+        if kind == "crash":
+            self._kill_pool()
+        if self._charge(st, kind, detail):
+            self._requeue(st, ready, now_seq)
+
+    def _requeue(self, st: _JobState, ready, now_seq) -> None:
+        seq = next(now_seq)
+        heapq.heappush(
+            ready, (time.monotonic() + self._backoff(st.attempts), seq, st))
+
+    # -- main loop ---------------------------------------------------------
+    def run(self, jobs: list[Job]) -> tuple[list[_JobState], int]:
+        states = [_JobState(job=j) for j in jobs]
+        seq_counter = iter(range(1, 1 << 30))
+        ready: list[tuple[float, int, _JobState]] = [
+            (0.0, -len(states) + i, st) for i, st in enumerate(states)]
+        heapq.heapify(ready)
+        inflight: dict[Future, tuple[_JobState, float]] = {}
+
+        try:
+            while ready or inflight:
+                now = time.monotonic()
+                # submit ready jobs, at most one per worker (so a submit
+                # time approximates a start time for the timeout clock,
+                # and a pool break loses at most `processes` jobs)
+                while ready and ready[0][0] <= now \
+                        and len(inflight) < self.processes:
+                    _, _, st = heapq.heappop(ready)
+                    deadline = (now + self.cfg.job_timeout_s
+                                if self.cfg.job_timeout_s else float("inf"))
+                    try:
+                        fut = self._fresh_pool().submit(
+                            _run_job, st.job, self.cfg.watchdog_max_cycles)
+                    except BrokenProcessPool:
+                        self._kill_pool()
+                        if self._charge(st, "crash", "pool broke on submit"):
+                            self._requeue(st, ready, seq_counter)
+                        continue
+                    inflight[fut] = (st, deadline)
+                if not inflight:
+                    if ready:
+                        time.sleep(max(ready[0][0] - time.monotonic(), 0.0))
+                    continue
+
+                next_deadline = min(dl for _, dl in inflight.values())
+                next_ready = ready[0][0] if ready else float("inf")
+                timeout = min(next_deadline, next_ready) - time.monotonic()
+                done, _ = wait(
+                    inflight,
+                    timeout=None if timeout == float("inf")
+                    else max(timeout, 0.01),
+                    return_when=FIRST_COMPLETED)
+
+                pool_broke = False
+                for fut in done:
+                    st, _ = inflight.pop(fut)
+                    exc = fut.exception()
+                    if exc is None:
+                        self._succeed(st, fut.result()[2])
+                        continue
+                    kind, detail = self._classify(exc)
+                    if kind == "crash":
+                        # suspect: attribution happens in the serial probes
+                        pool_broke = True
+                        inflight[fut] = (st, float("inf"))
+                        continue
+                    if self._charge(st, kind, detail):
+                        self._requeue(st, ready, seq_counter)
+
+                now = time.monotonic()
+                overdue = {fut for fut, (st, dl) in inflight.items()
+                           if dl <= now and not fut.done()}
+                if pool_broke or overdue:
+                    suspects = sorted((st for st, _ in inflight.values()),
+                                      key=lambda st: job_label(st.job))
+                    timed_out = {id(st) for fut, (st, _) in inflight.items()
+                                 if fut in overdue}
+                    inflight.clear()
+                    self._kill_pool()
+                    for st in suspects:
+                        if id(st) not in timed_out:
+                            continue
+                        if self._charge(
+                                st, "timeout",
+                                f"exceeded job_timeout_s="
+                                f"{self.cfg.job_timeout_s}s"):
+                            self._requeue(st, ready, seq_counter)
+                    for st in suspects:
+                        if st.done or id(st) in timed_out:
+                            continue
+                        if pool_broke:
+                            # this job re-executes because a worker died; the
+                            # re-run is visible in the report (an uncharged
+                            # "crash" retry) whether or not this job was the
+                            # culprit — the serial probe below settles blame.
+                            st.retries.append("crash")
+                            self._probe(st, ready, seq_counter)
+                        else:
+                            # innocent casualty of a timeout recycle: its
+                            # worker was killed through no fault of its own.
+                            # Requeue without charging an attempt.
+                            self._requeue(st, ready, seq_counter)
+        finally:
+            if self.pool is not None:
+                self.pool.shutdown(wait=True, cancel_futures=True)
+                self.pool = None
+        return states, self.pool_recycles
+
+
+# --------------------------------------------------------------------------
+# The runner
+
+class SimRunner:
+    """Memoizing, disk-backed, fault-tolerant simulation runner."""
+
+    def __init__(self, processes: int | None = None,
+                 disk_cache: bool = True,
+                 cache_dir: pathlib.Path | None = None,
+                 sweep: SweepConfig | None = None) -> None:
+        self.processes = processes if processes is not None else default_processes()
+        self.disk_cache = disk_cache
+        self.cache_dir = pathlib.Path(cache_dir) if cache_dir else SIMCACHE
+        self.store = ResultStore(self.cache_dir)
+        self.sweep_config = sweep or SweepConfig()
+        self._memo: dict[Job, SimResult] = {}
+        self.failures: dict[Job, FailureRecord] = {}
+        self.stats = {"memo_hits": 0, "disk_hits": 0, "computed": 0,
+                      "retried": 0, "failed": 0, "quarantined": 0,
+                      "pool_recycles": 0, "tmp_gc": 0}
+        if self.disk_cache:
+            # sweep startup garbage-collects tmp files leaked by writers
+            # that crashed mid-publish
+            self.stats["tmp_gc"] += self.store.gc_stale_tmp()
+
+    # -- cache layers ------------------------------------------------------
+    def _disk_path(self, job: Job) -> pathlib.Path:
+        return self.store.path(sim_key(*job))
+
+    def _disk_load(self, job: Job) -> SimResult | None:
+        if not self.disk_cache:
+            return None
+        key = sim_key(*job)
+        label = job_label(job)
+        payload = self.store.load(key, label=label)
+        if payload is None:
+            self._sync_quarantines()
+            return None
+        try:
+            return SimResult(**payload)
+        except TypeError as e:
+            # checksummed envelope, but the payload is not a SimResult
+            # (wrong-schema entry): quarantine, recompute
+            self.store.quarantine(key, f"payload schema mismatch ({e})",
+                                  label=label)
+            self._sync_quarantines()
+            return None
+
+    def _disk_store(self, job: Job, res: SimResult) -> None:
+        if not self.disk_cache:
+            return
+        self.store.store(sim_key(*job), asdict(res), label=job_label(job))
+
+    def _sync_quarantines(self) -> None:
+        self.stats["quarantined"] = self.store.stats["quarantined"]
+
+    def _lookup(self, job: Job) -> SimResult | None:
+        res = self._memo.get(job)
+        if res is not None:
+            self.stats["memo_hits"] += 1
+            return res
+        res = self._disk_load(job)
+        if res is not None:
+            self.stats["disk_hits"] += 1
+            self._memo[job] = res
+        return res
+
+    # -- public API --------------------------------------------------------
+    def sim(self, workload, cfg: SimConfig) -> SimResult:
+        """One simulation through the memo/disk cache (inline on miss)."""
+        name = workload if isinstance(workload, str) else workload.name
+        job = (name, cfg)
+        res = self._lookup(job)
+        if res is None:
+            self.stats["computed"] += 1
+            _, _, payload = _run_job(job, self.sweep_config.watchdog_max_cycles)
+            res = SimResult(**payload)
+            self._memo[job] = res
+            self._disk_store(job, res)
+        return res
+
+    def try_sim(self, workload, cfg: SimConfig) -> SimResult | None:
+        """`sim`, degraded: None for jobs that already failed this sweep or
+        fail inline — the caller annotates the missing point and goes on."""
+        name = workload if isinstance(workload, str) else workload.name
+        job = (name, cfg)
+        if job in self.failures:
+            return None
+        try:
+            return self.sim(name, cfg)
+        except Exception as e:  # noqa: BLE001 - degrade, don't crash sweeps
+            self.failures[job] = FailureRecord(
+                job=job_label(job), workload=name, design=cfg.design,
+                kind="budget" if isinstance(e, SimBudgetExceeded)
+                else "transient",
+                detail=f"{type(e).__name__}: {e}", attempts=1,
+                key=sim_key(name, cfg))
+            self.stats["failed"] = len(self.failures)
+            return None
+
+    def sim_gpu(self, workload, cfg: SimConfig) -> GpuResult:
+        """One whole-GPU simulation: the per-SM jobs go through the memo /
+        disk cache (and the pool, if several SMs miss), then aggregate."""
+        name = workload if isinstance(workload, str) else workload.name
+        jobs = [(name, c) for c in per_sm_configs(cfg)]
+        self.prefill(jobs)
+        return aggregate(cfg, [self.sim(*job) for job in jobs], name)
+
+    def prefill_gpu(self, jobs: list[Job]) -> SweepReport:
+        """Expand whole-GPU jobs into their per-SM jobs and prefill those."""
+        return self.prefill([(name, c) for name, cfg in jobs
+                             for c in per_sm_configs(cfg)])
+
+    def prefill(self, jobs: list[Job]) -> SweepReport:
+        """Execute all cache-missing jobs across the process pool.
+
+        Never raises on job failure: faults are retried/recorded per
+        `SweepConfig` and the returned `SweepReport` says exactly what
+        completed, what was retried, what was quarantined, and what is
+        missing.  Callers that need hard failure check ``report.ok``."""
+        t0 = time.time()
+        q_before = self.store.stats["quarantined"]
+        misses: list[Job] = []
+        seen: set[Job] = set()
+        for job in jobs:
+            if job in seen:
+                continue
+            seen.add(job)
+            if self._lookup(job) is None:
+                misses.append(job)
+        report = SweepReport(total=len(seen), cached=len(seen) - len(misses))
+        if misses:
+            if self.processes <= 1 or len(misses) == 1:
+                self._prefill_inline(misses, report)
+            else:
+                self._prefill_pool(misses, report)
+        report.quarantined = list(
+            self.store.quarantines[q_before:])
+        report.completed = report.cached + report.computed
+        report.tmp_files_removed = self.stats["tmp_gc"]
+        report.wall_s = round(time.time() - t0, 3)
+        self._sync_quarantines()
+        self.stats["retried"] += sum(report.retried.values())
+        self.stats["failed"] = len(self.failures)
+        self.stats["pool_recycles"] += report.pool_recycles
+        return report
+
+    # -- dispatch backends -------------------------------------------------
+    def _record_outcomes(self, states, report: SweepReport) -> None:
+        for st in states:
+            if st.retries:
+                report.retried[job_label(st.job)] = len(st.retries)
+                report.retry_kinds[job_label(st.job)] = list(st.retries)
+            if st.failure is not None:
+                report.failed.append(st.failure)
+                self.failures[st.job] = st.failure
+            else:
+                report.computed += 1
+
+    def _prefill_inline(self, misses: list[Job], report: SweepReport) -> None:
+        """Serial fallback (processes <= 1): retries transient/budget-style
+        exceptions in-process; crash/hang protection needs the pool path."""
+        cfgd = self.sweep_config
+        states = []
+        for job in misses:
+            st = _JobState(job=job)
+            states.append(st)
+            while not st.done:
+                try:
+                    _, _, payload = _run_job(job, cfgd.watchdog_max_cycles)
+                except Exception as e:  # noqa: BLE001 - classified below
+                    kind = ("budget" if isinstance(e, SimBudgetExceeded)
+                            else "transient")
+                    retry = kind in _RETRIABLE \
+                        and st.attempts + 1 < cfgd.max_attempts
+                    st.attempts += 1
+                    if retry:
+                        st.retries.append(kind)
+                        time.sleep(min(cfgd.backoff_max_s,
+                                       cfgd.backoff_base_s
+                                       * cfgd.backoff_factor
+                                       ** (st.attempts - 1)))
+                        continue
+                    name, cfg = job
+                    st.failure = FailureRecord(
+                        job=job_label(job), workload=name, design=cfg.design,
+                        kind=kind, detail=f"{type(e).__name__}: {e}",
+                        attempts=st.attempts, key=sim_key(name, cfg))
+                    st.done = True
+                else:
+                    res = SimResult(**payload)
+                    self._memo[job] = res
+                    self._disk_store(job, res)
+                    self.stats["computed"] += 1
+                    st.done = True
+        report.computed = 0
+        self._record_outcomes(states, report)
+
+    def _prefill_pool(self, misses: list[Job], report: SweepReport) -> None:
+        def on_success(job: Job, payload: dict) -> None:
+            res = SimResult(**payload)
+            self._memo[job] = res
+            self._disk_store(job, res)
+            self.stats["computed"] += 1
+
+        dispatcher = _Dispatcher(self.processes, self.sweep_config, on_success)
+        states, recycles = dispatcher.run(misses)
+        report.pool_recycles = recycles
+        report.computed = 0
+        self._record_outcomes(states, report)
+
+
+_DEFAULT: SimRunner | None = None
+
+
+def default_runner() -> SimRunner:
+    """Process-wide shared runner (memo survives across figure functions)."""
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = SimRunner()
+    return _DEFAULT

@@ -1,6 +1,6 @@
 from .engine import (
     BANK_MODELS, DESIGNS, INTERVAL_STRATEGIES, RENUMBER_MODES, SCHEDULERS,
-    SimConfig, SimResult, Simulator, simulate,
+    SimBudgetExceeded, SimConfig, SimResult, Simulator, simulate,
 )
 from .designs import (
     TABLE2, baseline_config, design_config, max_tolerable_latency,
@@ -9,6 +9,7 @@ from .designs import (
 from .gpu import GpuResult, simulate_gpu
 
 __all__ = [
+    "SimBudgetExceeded",
     "SimConfig", "SimResult", "Simulator", "simulate", "DESIGNS",
     "SCHEDULERS", "BANK_MODELS", "RENUMBER_MODES", "INTERVAL_STRATEGIES",
     "GpuResult", "simulate_gpu",

@@ -50,6 +50,7 @@ def design_config(
     bank_model: str = "none",
     renumber: str = "icg",
     interval_strategy: str = "paper",
+    max_cycles: int = 0,
 ) -> SimConfig:
     """One design point.  GPU-scale knobs: ``num_sms`` > 1 (run the config
     through `repro.sim.gpu.simulate_gpu`; ``num_warps`` is then the kernel's
@@ -60,7 +61,9 @@ def design_config(
     operand reads/writebacks, ``renumber="identity"`` makes LTRF_conf skip
     the ICG renumbering pass (the §4.3 ablation axis).  Compiler knob:
     ``interval_strategy`` picks the interval-formation strategy for the
-    LTRF-family designs (``"paper"``/``"capacity"``/``"fixed:N"``)."""
+    LTRF-family designs (``"paper"``/``"capacity"``/``"fixed:N"``).
+    Robustness knob: ``max_cycles`` arms the cycle-budget watchdog — a run
+    that passes it raises `repro.sim.SimBudgetExceeded` (0 = unlimited)."""
     t = TABLE2[table2_config]
     size = rf_size_kb if rf_size_kb is not None else BASE_RF_KB * t["cap_mult"]
     mult = mrf_latency_mult if mrf_latency_mult is not None else t["lat_mult"]
@@ -80,12 +83,14 @@ def design_config(
         bank_model=bank_model,
         renumber=renumber,
         interval_strategy=interval_strategy,
+        max_cycles=max_cycles,
     )
 
 
 def baseline_config(num_warps: int = 64, num_sms: int = 1,
                     mem_partitions: int = 0,
-                    bank_model: str = "none") -> SimConfig:
+                    bank_model: str = "none",
+                    max_cycles: int = 0) -> SimConfig:
     """§6 normalization point: config #1 + the 16KB RFC space, no cache, 1x.
 
     At GPU scale the baseline keeps the default ``two_level`` scheduler
@@ -93,7 +98,7 @@ def baseline_config(num_warps: int = 64, num_sms: int = 1,
     return SimConfig(design="BL", mrf_latency_mult=1.0, rf_size_kb=BASE_RF_KB,
                      add_rfc_to_main=True, num_warps=num_warps,
                      num_sms=num_sms, mem_partitions=mem_partitions,
-                     bank_model=bank_model)
+                     bank_model=bank_model, max_cycles=max_cycles)
 
 
 def run(workload: Workload, cfg: SimConfig) -> SimResult:

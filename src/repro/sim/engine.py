@@ -121,6 +121,12 @@ class SimConfig:
     max_inflight_prefetch: int = 12
     dram_interval: int = 4         # cycles between DRAM line services (bw/SM)
     seed: int = 0
+    max_cycles: int = 0            # cycle-budget watchdog: a simulation that
+                                   # passes this cycle raises SimBudgetExceeded
+                                   # (0 = unlimited).  Never changes the
+                                   # counters of a run that completes, so the
+                                   # sweep cache (serving.sweep.sim_key)
+                                   # deliberately excludes it.
     scheduler: str = "two_level"   # warp-scheduler policy (SCHEDULERS)
     num_sms: int = 1               # SMs on the chip; >1 via repro.sim.gpu
     mem_partitions: int = 0        # DRAM partitions feeding the SMs
@@ -176,6 +182,29 @@ class SimResult:
     def bank_conflict_rate(self) -> float:
         """Extra bank-serialization rounds per retired instruction."""
         return self.bank_conflicts / max(self.instructions, 1)
+
+
+class SimBudgetExceeded(RuntimeError):
+    """A simulation ran past its ``SimConfig.max_cycles`` budget.
+
+    Structured (design/workload/budget/cycles attributes) and raised at the
+    same simulated cycle by both the fast engine and the golden oracle (the
+    watchdog sits at the identical point of both run loops), so the sweep
+    service can classify runaway configs deterministically.  Args are passed
+    positionally to ``RuntimeError`` so the exception survives pickling
+    across process-pool workers."""
+
+    def __init__(self, design: str, workload: str,
+                 budget: int, cycles: int) -> None:
+        super().__init__(design, workload, budget, cycles)
+        self.design = design
+        self.workload = workload
+        self.budget = budget
+        self.cycles = cycles
+
+    def __str__(self) -> str:
+        return (f"{self.workload}/{self.design}: simulation exceeded "
+                f"max_cycles={self.budget} (reached cycle {self.cycles})")
 
 
 ACTIVE, INACTIVE_READY, INACTIVE_WAIT, PREFETCH, DONE = range(5)
@@ -369,12 +398,16 @@ class Simulator:
         activate(0)
 
         issue_width = cfg.issue_width
+        max_cycles = cfg.max_cycles
         cycle = 0
         guard = 0
         while True:
             guard += 1
             if guard > 8_000_000:
                 raise RuntimeError("simulator wedged")
+            if max_cycles and cycle > max_cycles:
+                raise SimBudgetExceeded(cfg.design, self.w.name,
+                                        max_cycles, cycle)
 
             while wake and wake[0][0] <= cycle:
                 _, wid = heappop(wake)

@@ -24,7 +24,7 @@ from repro.workloads.suite import Workload
 
 from .engine import (
     ACTIVE, DONE, INACTIVE_READY, INACTIVE_WAIT, PREFETCH,
-    SimConfig, SimResult, _Warp,
+    SimBudgetExceeded, SimConfig, SimResult, _Warp,
 )
 
 class GoldenSimulator:
@@ -136,11 +136,15 @@ class GoldenSimulator:
         activate(0)
 
         cycle = 0
+        max_cycles = cfg.max_cycles
         guard = 0
         while True:
             guard += 1
             if guard > 8_000_000:
                 raise RuntimeError("simulator wedged")
+            if max_cycles and cycle > max_cycles:
+                raise SimBudgetExceeded(cfg.design, self.w.name,
+                                        max_cycles, cycle)
 
             for wid in resident:
                 wp = warps[wid]

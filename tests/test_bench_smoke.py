@@ -38,7 +38,8 @@ def test_bench_sim_help_lists_all_smoke_flags():
         env=jax_subprocess_env())
     assert r.returncode == 0, (r.stdout, r.stderr)
     for flag in ("--smoke", "--gpu-smoke", "--bank-smoke",
-                 "--interval-smoke", "--baseline", "--suite"):
+                 "--interval-smoke", "--chaos-smoke", "--baseline",
+                 "--suite"):
         assert flag in r.stdout, flag
 
 

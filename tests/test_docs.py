@@ -32,7 +32,7 @@ MARKDOWN_FILES = sorted([ROOT / "README.md", *DOCS.glob("*.md")])
 
 def test_docs_tree_exists():
     for name in ("architecture.md", "simulator.md", "configuration.md",
-                 "compiler.md"):
+                 "compiler.md", "serving.md"):
         assert (DOCS / name).is_file(), f"docs/{name} missing"
 
 
@@ -131,5 +131,33 @@ def test_markdown_relative_links_resolve(md):
 
 def test_docs_are_linked_from_readme():
     readme = (ROOT / "README.md").read_text()
-    for name in ("architecture.md", "simulator.md", "configuration.md"):
+    for name in ("architecture.md", "simulator.md", "configuration.md",
+                 "serving.md"):
         assert f"docs/{name}" in readme, f"README does not index docs/{name}"
+
+
+def test_serving_doc_names_every_sweep_knob():
+    """docs/serving.md documents every `SweepConfig` field, every failure
+    kind, and the operational surface of the sweep service (env vars,
+    quarantine, report) — a new retry/timeout knob cannot land undocumented."""
+    from repro.serving.sweep import (
+        FAILURE_KINDS, FailureRecord, SweepConfig, SweepReport,
+    )
+
+    doc = (DOCS / "serving.md").read_text()
+    missing = [f.name for f in dataclasses.fields(SweepConfig)
+               if f"`{f.name}`" not in doc]
+    assert not missing, \
+        f"SweepConfig knobs missing from docs/serving.md: {missing}"
+    for kind in FAILURE_KINDS:
+        assert f"`{kind}`" in doc, f"failure kind {kind!r} undocumented"
+    for f in dataclasses.fields(SweepReport):
+        assert f"`{f.name}`" in doc, \
+            f"SweepReport field {f.name!r} undocumented in serving.md"
+    for f in dataclasses.fields(FailureRecord):
+        assert f"`{f.name}`" in doc, \
+            f"FailureRecord field {f.name!r} undocumented in serving.md"
+    for name in ("REPRO_FAULT_PLAN", "REPRO_SIMCACHE", "REPRO_SIM_PROCS",
+                 "quarantine", "sim_key", "SweepReport", "max_cycles",
+                 "SimBudgetExceeded", "--chaos-smoke"):
+        assert name in doc, f"{name} undocumented in serving.md"

@@ -283,6 +283,39 @@ def test_fuzz_interval_strategies(seed):
             (seed, cap_cfg.design)
 
 
+# ---------------------------------------------- watchdog fuzzed invariants
+
+@pytest.mark.parametrize("seed", range(600, 612))
+def test_fuzz_watchdog_budget(seed):
+    """ISSUE 6: the ``SimConfig.max_cycles`` watchdog.  A budget >= the
+    run's final cycle count is a bit-identical no-op in both engines (the
+    cache key deliberately ignores it); an artificially small budget raises
+    the structured `SimBudgetExceeded` identically — same attributes, same
+    trip cycle — from engine and golden."""
+    from repro.sim import SimBudgetExceeded
+
+    w = random_workload(seed)
+    cfg = random_config(seed)
+    ref = simulate(w, cfg)
+
+    exact = replace(cfg, max_cycles=ref.cycles)
+    assert simulate(w, exact) == ref, seed
+    assert golden_simulate(w, exact) == golden_simulate(w, cfg) == ref, seed
+    assert simulate(w, replace(cfg, max_cycles=ref.cycles + 1000)) == ref
+
+    budget = max(1, ref.cycles // 3)
+    tight = replace(cfg, max_cycles=budget)
+    with pytest.raises(SimBudgetExceeded) as fast_exc:
+        simulate(w, tight)
+    with pytest.raises(SimBudgetExceeded) as gold_exc:
+        golden_simulate(w, tight)
+    f, g = fast_exc.value, gold_exc.value
+    assert (f.design, f.workload, f.budget) == (cfg.design, w.name, budget)
+    assert f.cycles > budget, seed
+    assert (f.design, f.workload, f.budget, f.cycles) == \
+           (g.design, g.workload, g.budget, g.cycles), seed
+
+
 @pytest.mark.parametrize("seed", range(8))
 def test_fuzz_gpu_aggregation_identities(seed):
     """Multi-SM runs: instructions sum over SMs, cycles are the slowest SM,

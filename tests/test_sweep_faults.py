@@ -1,0 +1,416 @@
+"""Chaos suite for the fault-tolerant sweep service (repro.serving.sweep).
+
+Every failure mode the dispatcher claims to survive is exercised here
+deterministically through the fault-injection harness
+(`repro.serving.faults`): transient raises retried with backoff, worker
+crashes recovered by pool recycling, hangs cut off by wall-clock timeouts,
+deterministic budget blowups (`SimBudgetExceeded`) recorded without
+retries, corrupt/truncated/mis-schema'd cache entries quarantined, leaked
+tmp files garbage-collected, and the ENGINE/PLAN/PIPELINE rev triple keying
+the on-disk cache.  The final test is the ISSUE-6 acceptance sweep: 56 jobs
+under one crash + one hang + one transient + one corrupt entry must
+complete, retry with backoff, quarantine the torn entry on replay, and
+report exactly the injected failures.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import pickle
+import subprocess
+import sys
+import time
+
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+from repro.serving import faults
+from repro.serving import sweep as sweep_mod
+from repro.serving.sweep import (
+    FAILURE_KINDS, FailureRecord, ResultStore, SimRunner, SweepConfig,
+    SweepReport, job_label, sim_key,
+)
+from repro.sim import SimBudgetExceeded, SimConfig, simulate
+from repro.workloads import WORKLOADS
+
+pytestmark = pytest.mark.filterwarnings(
+    "ignore::DeprecationWarning")  # os.fork + threads (jax) in pool workers
+
+CFG = SimConfig(design="LTRF", num_warps=4)
+FAST = SweepConfig(backoff_base_s=0.01, backoff_max_s=0.05)
+
+
+def _arm(tmp_path, monkeypatch, fault_specs) -> pathlib.Path:
+    plan = tmp_path / "fault_plan.json"
+    plan.write_text(json.dumps({"faults": fault_specs}))
+    monkeypatch.setenv(faults.ENV_PLAN, str(plan))
+    return plan
+
+
+def _jobs(workloads=("kmeans", "bfs"), designs=("BL", "LTRF"), seeds=3):
+    return [(n, SimConfig(design=d, num_warps=4, seed=s))
+            for n in workloads for d in designs for s in range(seeds)]
+
+
+# ------------------------------------------------------------ fault harness
+
+def test_fault_point_is_noop_without_plan(monkeypatch, tmp_path):
+    monkeypatch.delenv(faults.ENV_PLAN, raising=False)
+    faults.fault_point("run", "anything/BL/seed0")  # must not raise
+
+
+def test_fault_times_bounded_across_processes(tmp_path, monkeypatch):
+    plan = _arm(tmp_path, monkeypatch,
+                [{"match": "x/BL/seed0", "action": "raise", "times": 2}])
+    for _ in range(2):
+        with pytest.raises(faults.InjectedFault):
+            faults.fault_point("run", "x/BL/seed0")
+    faults.fault_point("run", "x/BL/seed0")  # exhausted: no-op
+    state = plan.with_suffix(plan.suffix + ".state")
+    assert sorted(p.name for p in state.iterdir()) == ["f0.hit0", "f0.hit1"]
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError):
+        faults.FaultSpec(match="x", action="explode")
+    with pytest.raises(ValueError):
+        faults.FaultSpec(match="x", action="raise", stage="compile")
+
+
+# ------------------------------------------------------- retry and backoff
+
+def test_transient_fault_retried_with_backoff(tmp_path, monkeypatch):
+    label = "bfs/BL/seed0"
+    _arm(tmp_path, monkeypatch,
+         [{"match": label, "action": "raise", "times": 2}])
+    sweep = SweepConfig(max_attempts=3, backoff_base_s=0.1,
+                        backoff_factor=2.0, backoff_max_s=2.0)
+    runner = SimRunner(processes=2, cache_dir=tmp_path / "cache", sweep=sweep)
+    t0 = time.monotonic()
+    report = runner.prefill(_jobs())
+    wall = time.monotonic() - t0
+    assert report.ok and report.completed == report.total
+    assert report.retried == {label: 2}
+    assert report.retry_kinds[label] == ["transient", "transient"]
+    assert report.failed == []
+    # exponential backoff actually waited: 0.1s after attempt 1, 0.2s after
+    # attempt 2 (deterministic sleeps, so this lower bound cannot flake)
+    assert wall >= 0.3
+    assert runner.stats["retried"] == 2
+    # and the retried job's result is exact
+    cfg = SimConfig(design="BL", num_warps=4, seed=0)
+    assert runner.sim("bfs", cfg) == simulate(WORKLOADS["bfs"], cfg)
+
+
+def test_transient_retry_inline_single_process(tmp_path, monkeypatch):
+    label = "kmeans/LTRF/seed0"
+    _arm(tmp_path, monkeypatch,
+         [{"match": label, "action": "raise", "times": 1}])
+    runner = SimRunner(processes=1, cache_dir=tmp_path / "cache", sweep=FAST)
+    report = runner.prefill(_jobs(workloads=("kmeans",), designs=("LTRF",)))
+    assert report.ok and report.retried == {label: 1}
+    assert report.computed == report.total == 3
+
+
+def test_permanent_failure_degrades_gracefully(tmp_path, monkeypatch):
+    label = "nw/BL/seed1"
+    _arm(tmp_path, monkeypatch, [{"match": label, "action": "raise"}])
+    runner = SimRunner(processes=2, cache_dir=tmp_path / "cache",
+                       sweep=SweepConfig(max_attempts=2, backoff_base_s=0.01))
+    jobs = _jobs(workloads=("nw",), designs=("BL",), seeds=4)
+    report = runner.prefill(jobs)
+    assert not report.ok
+    assert [(f.job, f.kind, f.attempts) for f in report.failed] == \
+        [(label, "transient", 2)]
+    assert report.failed[0].key == sim_key("nw", jobs[1][1])
+    assert report.completed == report.total - 1 == 3
+    assert runner.stats["failed"] == 1
+    # try_sim degrades to None for the failed point, works for the others
+    assert runner.try_sim("nw", jobs[1][1]) is None
+    assert runner.try_sim("nw", jobs[0][1]) is not None
+    # the report is JSON-serializable for artifacts
+    round_trip = json.loads(json.dumps(report.to_dict()))
+    assert round_trip["failed"][0]["kind"] == "transient"
+    assert round_trip["ok"] is False
+
+
+# ----------------------------------------------------- crashes and timeouts
+
+def test_worker_crash_recycles_pool_and_retries(tmp_path, monkeypatch):
+    label = "kmeans/LTRF/seed1"
+    _arm(tmp_path, monkeypatch,
+         [{"match": label, "action": "exit", "times": 1}])
+    runner = SimRunner(processes=2, cache_dir=tmp_path / "cache", sweep=FAST)
+    jobs = _jobs()
+    report = runner.prefill(jobs)
+    assert report.ok and report.completed == report.total == len(jobs)
+    assert report.pool_recycles >= 1
+    assert "crash" in report.retry_kinds[label]
+    # no job may fail because a *neighbor* crashed the pool: innocents are
+    # re-executed without being charged an attempt
+    assert report.failed == []
+    for name, cfg in jobs:
+        assert runner.sim(name, cfg) == simulate(WORKLOADS[name], cfg)
+
+
+def test_repeated_crashes_exhaust_attempts(tmp_path, monkeypatch):
+    label = "bfs/LTRF/seed0"
+    _arm(tmp_path, monkeypatch, [{"match": label, "action": "exit"}])
+    runner = SimRunner(processes=2, cache_dir=tmp_path / "cache",
+                       sweep=SweepConfig(max_attempts=2, backoff_base_s=0.01))
+    report = runner.prefill(_jobs(seeds=2))
+    assert [(f.job, f.kind) for f in report.failed] == [(label, "crash")]
+    assert report.failed[0].attempts == 2
+    assert report.completed == report.total - 1
+    assert report.pool_recycles >= 2
+
+
+def test_hung_worker_times_out_and_job_retries(tmp_path, monkeypatch):
+    label = "kmeans/LTRF/seed2"
+    _arm(tmp_path, monkeypatch,
+         [{"match": label, "action": "hang", "seconds": 60, "times": 1}])
+    runner = SimRunner(
+        processes=2, cache_dir=tmp_path / "cache",
+        sweep=SweepConfig(job_timeout_s=1.5, backoff_base_s=0.01))
+    t0 = time.monotonic()
+    report = runner.prefill(_jobs(workloads=("kmeans",), designs=("LTRF",)))
+    wall = time.monotonic() - t0
+    assert report.ok and report.completed == report.total
+    assert report.retry_kinds[label] == ["timeout"]
+    assert report.pool_recycles >= 1
+    assert wall < 30  # the 60s sleeper was killed, not waited out
+
+
+def test_budget_blowup_recorded_not_retried(tmp_path):
+    runner = SimRunner(
+        processes=2, cache_dir=tmp_path / "cache",
+        sweep=SweepConfig(watchdog_max_cycles=50, backoff_base_s=0.01))
+    report = runner.prefill(_jobs(workloads=("kmeans",), designs=("BL",)))
+    assert not report.ok and len(report.failed) == report.total
+    for rec in report.failed:
+        assert rec.kind == "budget"
+        assert rec.attempts == 1          # deterministic: never retried
+        assert "max_cycles=50" in rec.detail
+    assert report.retried == {}
+
+
+def test_per_job_max_cycles_overrides_sweep_watchdog(tmp_path):
+    runner = SimRunner(
+        processes=1, cache_dir=tmp_path / "cache",
+        sweep=SweepConfig(watchdog_max_cycles=50))
+    cfg = SimConfig(design="BL", num_warps=4, max_cycles=10_000_000)
+    report = runner.prefill([("kmeans", cfg)])
+    assert report.ok  # the job's own (ample) budget wins over the sweep's
+
+
+def test_sim_budget_exceeded_pickles():
+    exc = SimBudgetExceeded("BL", "kmeans", 50, 51)
+    back = pickle.loads(pickle.dumps(exc))
+    assert (back.design, back.workload, back.budget, back.cycles) == \
+        ("BL", "kmeans", 50, 51)
+    assert "max_cycles=50" in str(back)
+
+
+# ----------------------------------------------- cache integrity/quarantine
+
+def _seed_cache(tmp_path) -> tuple[pathlib.Path, str]:
+    runner = SimRunner(processes=1, cache_dir=tmp_path / "cache")
+    runner.sim("kmeans", CFG)
+    return tmp_path / "cache", sim_key("kmeans", CFG)
+
+
+@pytest.mark.parametrize("corruption", ["truncated", "empty", "wrong_schema",
+                                        "bit_rot", "mis_keyed"])
+def test_corrupt_entry_quarantined_not_silently_recomputed(
+        tmp_path, corruption):
+    cache_dir, key = _seed_cache(tmp_path)
+    entry_path = cache_dir / f"{key}.json"
+    if corruption == "truncated":
+        text = entry_path.read_text()
+        entry_path.write_text(text[: len(text) // 2])
+    elif corruption == "empty":
+        entry_path.write_text("")
+    elif corruption == "wrong_schema":
+        # valid checksummed envelope whose payload is not a SimResult
+        ResultStore(cache_dir).store(key, {"bogus": 1})
+    elif corruption == "bit_rot":
+        doc = json.loads(entry_path.read_text())
+        doc["payload"]["cycles"] += 1  # flip a counter, keep old checksum
+        entry_path.write_text(json.dumps(doc))
+    elif corruption == "mis_keyed":
+        doc = json.loads(entry_path.read_text())
+        doc["key"] = "0" * 20
+        entry_path.write_text(json.dumps(doc))
+
+    runner = SimRunner(processes=1, cache_dir=cache_dir)
+    res = runner.sim("kmeans", CFG)
+    # recomputed (correct result), with the corruption on the record
+    assert res == simulate(WORKLOADS["kmeans"], CFG)
+    assert runner.stats["computed"] == 1 and runner.stats["disk_hits"] == 0
+    assert runner.stats["quarantined"] == 1
+    q = cache_dir / "quarantine"
+    assert (q / f"{key}.json").exists()          # the evidence, preserved
+    record = json.loads((q / f"{key}.failure.json").read_text())
+    assert record["key"] == key and record["reason"]
+    assert record["job"] == job_label(("kmeans", CFG))
+    # the recompute healed the cache: a fresh runner disk-hits cleanly
+    healed = SimRunner(processes=1, cache_dir=cache_dir)
+    assert healed.sim("kmeans", CFG) == res
+    assert healed.stats["disk_hits"] == 1 and healed.stats["quarantined"] == 0
+
+
+def test_quarantine_surfaces_in_sweep_report(tmp_path):
+    cache_dir, key = _seed_cache(tmp_path)
+    text = (cache_dir / f"{key}.json").read_text()
+    (cache_dir / f"{key}.json").write_text(text[: len(text) // 2])
+    runner = SimRunner(processes=1, cache_dir=cache_dir)
+    report = runner.prefill([("kmeans", CFG), ("bfs", CFG)])
+    assert report.ok  # quarantine degrades to recompute, not failure
+    assert [(q.job, q.kind, q.key) for q in report.quarantined] == \
+        [(job_label(("kmeans", CFG)), "corrupt", key)]
+    assert report.computed == 2 and report.cached == 0
+
+
+def test_store_load_round_trip_and_stats(tmp_path):
+    store = ResultStore(tmp_path / "store")
+    store.store("k1", {"a": 1, "b": [2, 3]})
+    assert store.load("k1") == {"a": 1, "b": [2, 3]}
+    assert store.load("missing") is None
+    assert store.stats == {"hits": 1, "misses": 1, "stores": 1,
+                           "quarantined": 0, "tmp_gc": 0}
+
+
+# ------------------------------------------------------------- tmp-file GC
+
+def test_crashed_writer_tmp_file_collected_on_startup(tmp_path):
+    cache_dir = tmp_path / "cache"
+    cache_dir.mkdir()
+    # a writer that died mid-publish: grab a real-but-dead pid so the
+    # liveness probe (os.kill 0) takes the ProcessLookupError path
+    dead_pid = subprocess.run(
+        [sys.executable, "-c", "import os; print(os.getpid())"],
+        capture_output=True, text=True, check=True).stdout.strip()
+    leaked = cache_dir / f"{'a' * 20}.tmp{dead_pid}"
+    leaked.write_text('{"v": 1, "half an entr')
+    runner = SimRunner(processes=1, cache_dir=cache_dir)
+    assert not leaked.exists()
+    assert runner.stats["tmp_gc"] == 1
+    report = runner.prefill([("kmeans", CFG)])
+    assert report.tmp_files_removed == 1
+
+
+def test_live_writer_tmp_file_left_alone(tmp_path):
+    cache_dir = tmp_path / "cache"
+    cache_dir.mkdir()
+    mine = cache_dir / f"{'b' * 20}.tmp{os.getpid()}"
+    mine.write_text("in-flight write")
+    runner = SimRunner(processes=1, cache_dir=cache_dir)
+    assert mine.exists()  # this process is alive: not stale
+    assert runner.stats["tmp_gc"] == 0
+
+
+# ----------------------------------------------------- cache-key revisions
+
+def test_sim_key_includes_all_three_revs(monkeypatch):
+    base = sim_key("kmeans", CFG)
+    for rev in ("ENGINE_REV", "PLAN_REV", "PIPELINE_REV"):
+        monkeypatch.setattr(sweep_mod, rev, getattr(sweep_mod, rev) + 1)
+        assert sim_key("kmeans", CFG) != base, rev
+        monkeypatch.undo()
+    assert sim_key("kmeans", CFG) == base
+
+
+@pytest.mark.parametrize("rev", ["ENGINE_REV", "PLAN_REV", "PIPELINE_REV"])
+def test_rev_bump_misses_disk_cache(tmp_path, monkeypatch, rev):
+    """The satellite regression: a compiler-side (PLAN/PIPELINE) or
+    engine-side rev bump must invalidate cached SimResults."""
+    cache_dir, _ = _seed_cache(tmp_path)
+    monkeypatch.setattr(sweep_mod, rev, getattr(sweep_mod, rev) + 1)
+    runner = SimRunner(processes=1, cache_dir=cache_dir)
+    runner.sim("kmeans", CFG)
+    assert runner.stats["computed"] == 1 and runner.stats["disk_hits"] == 0
+
+
+def test_sim_key_ignores_max_cycles():
+    """The watchdog can only abort a run, never change a completed result,
+    so budgeted and unbudgeted sweeps must share cache entries."""
+    from dataclasses import replace
+    assert sim_key("kmeans", CFG) == \
+        sim_key("kmeans", replace(CFG, max_cycles=12345))
+    assert sim_key("kmeans", CFG) != sim_key("kmeans", replace(CFG, seed=1))
+
+
+# --------------------------------------------------------------- acceptance
+
+def test_chaos_acceptance_sweep(tmp_path, monkeypatch):
+    """ISSUE-6 acceptance: a 56-job sweep under one injected worker crash,
+    one hang, one twice-firing transient, and one corrupt cache write
+    completes, retries with backoff, quarantines the torn entry on replay,
+    and reports exactly the injected failures."""
+    transient, crash = "bfs/BL/seed0", "kmeans/LTRF/seed1"
+    hang, corrupt = "srad/LTRF/seed6", "nw/BL/seed3"
+    _arm(tmp_path, monkeypatch, [
+        {"match": transient, "action": "raise", "times": 2},
+        {"match": crash, "action": "exit", "times": 1},
+        {"match": hang, "action": "hang", "seconds": 60, "times": 1},
+        {"match": corrupt, "stage": "store", "action": "corrupt", "times": 1},
+    ])
+    jobs = [(n, SimConfig(design=d, num_warps=4, seed=s))
+            for n in ("kmeans", "bfs", "nw", "srad")
+            for d in ("BL", "LTRF") for s in range(7)]
+    assert len(jobs) == 56
+    runner = SimRunner(
+        processes=2, cache_dir=tmp_path / "cache",
+        sweep=SweepConfig(max_attempts=3, backoff_base_s=0.02,
+                          job_timeout_s=5.0))
+    report = runner.prefill(jobs)
+
+    assert report.ok and report.completed == report.total == 56
+    assert report.failed == []
+    assert report.retry_kinds[transient] == ["transient", "transient"]
+    assert "crash" in report.retry_kinds[crash]
+    assert any(k in ("timeout", "crash") for k in report.retry_kinds[hang])
+    assert report.pool_recycles >= 1
+    # exactly the injected failures: any other retried job may only be an
+    # innocent bystander of the injected pool break (uncharged "crash")
+    for label, kinds in report.retry_kinds.items():
+        if label not in (transient, crash, hang):
+            assert set(kinds) == {"crash"}, (label, kinds)
+
+    # replay with faults off: the torn entry quarantines and recomputes;
+    # everything else disk-hits; results are bit-exact vs direct simulation
+    monkeypatch.delenv(faults.ENV_PLAN)
+    replay = SimRunner(processes=2, cache_dir=tmp_path / "cache")
+    report2 = replay.prefill(jobs)
+    assert report2.ok
+    assert [q.job for q in report2.quarantined] == [corrupt]
+    assert report2.cached == 55 and report2.computed == 1
+    assert replay.stats["quarantined"] == 1
+    for name, cfg in jobs[:8]:
+        assert replay.sim(name, cfg) == simulate(WORKLOADS[name], cfg)
+
+
+def test_failure_kinds_are_closed():
+    assert set(FAILURE_KINDS) == \
+        {"transient", "crash", "timeout", "budget", "corrupt"}
+    rec = FailureRecord(job="a/BL/seed0", workload="a", design="BL",
+                        kind="crash")
+    assert rec.to_dict()["kind"] == "crash"
+
+
+def test_faults_disabled_results_bit_identical(tmp_path, monkeypatch):
+    """With no fault plan, the service path must be invisible: pool prefill
+    == serial prefill == direct simulate, and stats stay hit-clean."""
+    monkeypatch.delenv(faults.ENV_PLAN, raising=False)
+    jobs = _jobs(seeds=2)
+    par = SimRunner(processes=2, cache_dir=tmp_path / "p")
+    rep = par.prefill(jobs)
+    assert rep.ok and rep.retried == {} and rep.pool_recycles == 0
+    ser = SimRunner(processes=1, cache_dir=tmp_path / "s")
+    ser.prefill(jobs)
+    for name, cfg in jobs:
+        direct = simulate(WORKLOADS[name], cfg)
+        assert par.sim(name, cfg) == direct
+        assert ser.sim(name, cfg) == direct
