@@ -27,7 +27,16 @@ ablation (`benchmarks.sweep_subset.interval_sweep_jobs`) lands under
 all designs on the high-register-pressure workloads, with the ISSUE-5
 acceptance verdicts (capacity strictly reduces aggregate prefetch-stall
 cycles on LTRF_conf, with no per-workload IPC regression) — and
-``--interval-smoke`` runs it standalone for CI.
+``--interval-smoke`` runs it standalone for CI.  The cycle-attribution
+sweep (`benchmarks.sweep_subset.breakdown_sweep_jobs`) lands under
+``cycle_breakdown`` — BL vs LTRF vs LTRF_conf at Table-2 config #7, with
+per-design aggregate breakdowns/fractions and the ISSUE-7 verdicts (every
+breakdown sums exactly to its run's cycles; the LTRF designs strictly
+shrink BL's exposed mem-stall cycles and total cycles) — and ``--obs-smoke``
+runs the observability acceptance smoke (invariant + Chrome-trace artifact
++ metrics snapshot) standalone for CI.  Full runs also fold the sweep's
+`SweepReport` and the runner's metrics snapshot into ``sim_cache`` in the
+artifact, keyed by the sweep's deterministic ``run_id``.
 
 Usage::
 
@@ -41,6 +50,9 @@ Usage::
     python -m benchmarks.bench_sim --chaos-smoke  # sweep under injected
                                                 # faults: crash + hang +
                                                 # transient + corrupt (CI)
+    python -m benchmarks.bench_sim --obs-smoke  # cycle-attribution
+                                                # invariant + Chrome trace
+                                                # + metrics snapshot (CI)
     python -m benchmarks.bench_sim --suite traced   # sweep the lifted
                                                 # real kernels (untracked)
     python -m benchmarks.bench_sim --baseline   # re-measure the golden
@@ -59,14 +71,16 @@ import time
 
 from benchmarks.orchestrator import SimRunner, default_processes
 from benchmarks.sweep_subset import (
-    INTERVAL_SWEEP_CAP, INTERVAL_VERDICT_DESIGN, SWEEP_DESIGNS,
-    bank_sweep_jobs, gpu_sweep_jobs, interval_sweep_jobs, sweep_jobs,
+    BREAKDOWN_DESIGNS, INTERVAL_SWEEP_CAP, INTERVAL_VERDICT_DESIGN,
+    SWEEP_DESIGNS, bank_sweep_jobs, breakdown_sweep_jobs, gpu_sweep_jobs,
+    interval_sweep_jobs, sweep_jobs,
 )
 from repro.workloads import get_workload
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 BASELINE_PATH = ROOT / "experiments" / "paper" / "BENCH_baseline.json"
 OUT_PATH = ROOT / "BENCH_sim.json"
+TRACE_OUT_PATH = ROOT / "BENCH_obs_trace.json"
 
 SMOKE_WORKLOADS = ("srad", "kmeans")
 SMOKE_DESIGNS = ("BL", "LTRF")
@@ -75,7 +89,7 @@ SMOKE_DESIGNS = ("BL", "LTRF")
 def measure_fast_path(jobs, processes=None) -> dict:
     runner = SimRunner(processes=processes, disk_cache=False)
     t0 = time.time()
-    runner.prefill(jobs)
+    sweep_report = runner.prefill(jobs)
     wall = time.time() - t0
     total_instr = sum(runner.sim(*job).instructions for job in jobs)
     # persist into the shared sim cache for the figure harness, then replay
@@ -85,10 +99,15 @@ def measure_fast_path(jobs, processes=None) -> dict:
     for job, res in runner._memo.items():
         replay._disk_store(job, res)
     replay.prefill(jobs)
+    # the SweepReport and the runner's metrics snapshot ride along in the
+    # tracked artifact (instead of a bare stderr print), so degraded sweeps
+    # and latency distributions are joinable by run_id after the fact
     stats = {
         "timing_run": dict(runner.stats),
         "replay": dict(replay.stats),
         "replay_all_hits": replay.stats["computed"] == 0,
+        "sweep_report": sweep_report.to_dict(),
+        "metrics": runner.metrics_snapshot(),
     }
     return {
         "engine": "fast-path",
@@ -232,6 +251,134 @@ def measure_interval_sweep(processes=None, suite: str | None = None) -> dict:
     }
 
 
+def measure_breakdown_sweep(processes=None, suite: str | None = None,
+                            workloads=None) -> dict:
+    """The cycle-attribution sweep (BENCH_sim.json's ``cycle_breakdown``
+    section).
+
+    Runs BL vs LTRF vs LTRF_conf at Table-2 config #7 over the tracked
+    workload suite and records each run's ``SimResult.cycle_breakdown``
+    plus per-design aggregate totals and fractions.  Verdicts pin the
+    ISSUE-7 acceptance story: every breakdown sums exactly to the run's
+    cycles, and the LTRF designs convert the baseline's exposed-latency
+    stalls into prefetch the scheduler mostly hides — aggregate
+    ``mem_stall`` (and ``bank_conflict``) cycles strictly shrink vs BL,
+    and even after paying ``prefetch_stall`` the total cycle count is
+    strictly lower (the paper's net latency-tolerance win)."""
+    from repro.obs import breakdown_fractions, merge_breakdowns
+
+    runner = SimRunner(processes=processes, disk_cache=False)
+    jobs = breakdown_sweep_jobs(workloads=workloads, suite=suite)
+    t0 = time.time()
+    runner.prefill(jobs)
+    rows = []
+    for name, cfg in jobs:
+        res = runner.sim(name, cfg)
+        rows.append({"workload": name, "design": cfg.design,
+                     "cycles": res.cycles, "ipc": round(res.ipc, 4),
+                     "breakdown": dict(res.cycle_breakdown)})
+    wall = time.time() - t0
+    agg = {d: merge_breakdowns(r["breakdown"] for r in rows
+                               if r["design"] == d)
+           for d in BREAKDOWN_DESIGNS}
+    frac = {d: {c: round(v, 4) for c, v in breakdown_fractions(bd).items()}
+            for d, bd in agg.items()}
+
+    ltrf_designs = tuple(d for d in BREAKDOWN_DESIGNS if d != "BL")
+    verdicts = {
+        "breakdown_sums_to_cycles": all(
+            sum(r["breakdown"].values()) == r["cycles"] for r in rows),
+        "ltrf_fewer_mem_stall_cycles": all(
+            agg[d]["mem_stall"] < agg["BL"]["mem_stall"]
+            for d in ltrf_designs),
+        "ltrf_fewer_total_cycles": all(
+            sum(agg[d].values()) < sum(agg["BL"].values())
+            for d in ltrf_designs),
+    }
+    return {
+        "table2_config": 7,
+        "designs": list(BREAKDOWN_DESIGNS),
+        "sims": len(jobs),
+        "wall_s": round(wall, 2),
+        "aggregate": agg,
+        "aggregate_fractions": frac,
+        "verdicts": verdicts,
+        "all_verdicts_pass": all(verdicts.values()),
+        "results": rows,
+    }
+
+
+def measure_obs_smoke(processes=None,
+                      trace_out: pathlib.Path = TRACE_OUT_PATH) -> dict:
+    """The observability acceptance smoke (CI's ``--obs-smoke`` step).
+
+    Runs the cycle-attribution sweep on the two smoke workloads, re-runs
+    one job with the per-warp tracer enabled and writes the Chrome trace
+    to ``trace_out`` (uploaded as a CI artifact; load it in
+    chrome://tracing or Perfetto), and samples the sweep-service metrics
+    registry.  Verdicts: every breakdown sums to its run's cycles, the
+    trace round-trips through JSON with warp tracks present, the traced
+    run's counters are bit-identical to the untraced run, and the metrics
+    snapshot/Prometheus exposition carry the sweep's run_id and counters.
+    The CLI exits non-zero on any failed verdict."""
+    from repro.obs import trace_simulation
+
+    small = measure_breakdown_sweep(processes=processes,
+                                    workloads=SMOKE_WORKLOADS)
+
+    # traced re-run of one job: must not perturb a single counter.  A
+    # scaled-down warp count keeps the uploaded artifact small while still
+    # exercising multi-warp tracks + prefetch/stall spans.
+    from repro.sim import design_config
+
+    trace_wl, trace_design = "srad", "LTRF"
+    cfg = design_config(trace_design, table2_config=7, num_warps=8)
+    runner = SimRunner(processes=1, disk_cache=False)
+    untraced = runner.sim(trace_wl, cfg)
+    traced_res, sink = trace_simulation(get_workload(trace_wl), cfg)
+    sink.write(trace_out)
+    chrome = json.loads(trace_out.read_text())
+    events = chrome.get("traceEvents", [])
+    warp_tracks = {e["tid"] for e in events
+                   if e.get("ph") == "M" and e.get("name") == "thread_name"
+                   and e["args"]["name"].startswith("warp ")}
+
+    # sweep-service metrics: the smoke sweep above already drove a runner;
+    # sample a fresh one so counters are exactly this sweep's
+    mrunner = SimRunner(processes=1, disk_cache=False)
+    rep = mrunner.prefill(breakdown_sweep_jobs(workloads=SMOKE_WORKLOADS))
+    snap = mrunner.metrics_snapshot()
+    prom = mrunner.metrics.to_prometheus()
+
+    verdicts = {
+        "breakdown_sums_to_cycles":
+            small["verdicts"]["breakdown_sums_to_cycles"],
+        "trace_parses": bool(events),
+        "trace_has_warp_tracks": len(warp_tracks) >= 2,
+        "trace_counters_identical": traced_res == untraced,
+        "untraced_has_no_sink": runner.sim(trace_wl, cfg) == untraced,
+        "metrics_carry_run_id":
+            snap["run_id"] == rep.run_id != "",
+        "metrics_count_jobs":
+            snap["sweep_jobs_total"] == rep.total,
+        "prometheus_exposition":
+            "sweep_jobs_total" in prom and "sweep_job_latency_s_count" in prom,
+    }
+    return {
+        "trace_workload": f"{trace_wl}/{trace_design}",
+        "trace_out": str(trace_out),
+        "trace_events": len(events),
+        "trace_warp_tracks": len(warp_tracks),
+        # suite-level LTRF-vs-BL verdicts are meaningless on two compute-
+        # bound smoke workloads; only the invariant verdict gates the smoke
+        "cycle_breakdown": {k: small[k] for k in
+                            ("aggregate", "aggregate_fractions")},
+        "metrics": snap,
+        "verdicts": verdicts,
+        "all_verdicts_pass": all(verdicts.values()),
+    }
+
+
 def measure_chaos_sweep(processes: int | None = None) -> dict:
     """The fault-tolerance acceptance sweep (CI's ``--chaos-smoke`` step).
 
@@ -352,12 +499,14 @@ def run_bench(smoke: bool = False, processes: int | None = None,
     print(f"# sim cache: timing_run={cache['timing_run']} "
           f"replay={cache['replay']} all_hits={cache['replay_all_hits']}",
           file=sys.stderr)
-    if not smoke:  # CI runs the GPU/bank/interval sweeps as their own steps
+    if not smoke:  # CI runs the GPU/bank/interval/obs sweeps as own steps
         report["gpu_sweep"] = measure_gpu_sweep(processes=processes)
         report["bank_sweep"] = measure_bank_sweep(processes=processes,
                                                   suite=suite)
         report["interval_sweep"] = measure_interval_sweep(processes=processes,
                                                           suite=suite)
+        report["cycle_breakdown"] = measure_breakdown_sweep(
+            processes=processes, suite=suite)
     tracked = not smoke and suite in (None, "synth")
     if tracked and BASELINE_PATH.exists():
         base = json.loads(BASELINE_PATH.read_text())
@@ -392,6 +541,12 @@ def main(argv=None) -> None:
     ap.add_argument("--interval-smoke", action="store_true",
                     help="run only the interval-formation-strategy "
                          "ablation sweep (CI interval smoke)")
+    ap.add_argument("--obs-smoke", action="store_true",
+                    help="run the observability smoke: cycle-attribution "
+                         "invariant on the smoke workloads, a traced run "
+                         "written as a Chrome-trace artifact, and the "
+                         "sweep-service metrics snapshot; exits non-zero on "
+                         "any failed verdict (CI obs smoke)")
     ap.add_argument("--chaos-smoke", action="store_true",
                     help="run a small sweep under injected faults (crash + "
                          "hang + transient + corrupt cache entry) and "
@@ -411,6 +566,14 @@ def main(argv=None) -> None:
         report = measure_interval_sweep(processes=args.procs,
                                         suite=args.suite)
         print(json.dumps(report, indent=1))
+        return
+    if args.obs_smoke:
+        report = measure_obs_smoke(processes=args.procs)
+        print(json.dumps(report, indent=1))
+        if not report["all_verdicts_pass"]:
+            failed = [k for k, v in report["verdicts"].items() if not v]
+            print(f"# obs smoke FAILED: {failed}", file=sys.stderr)
+            sys.exit(1)
         return
     if args.chaos_smoke:
         report = measure_chaos_sweep(processes=args.procs)

@@ -77,13 +77,18 @@ def _prefill(jobs) -> None:
 
 def sweep_health() -> dict:
     """Degradation summary across every figure sweep run so far: the missing
-    design points (per-job FailureRecords) and the shared runner's
-    retry/quarantine counters.  `benchmarks.run` prints a warning when
-    ``ok`` is false so a degraded artifact set never passes silently."""
+    design points (per-job FailureRecords), the shared runner's
+    retry/quarantine counters, and its metrics snapshot (cache hit/miss +
+    latency distributions, stamped with the last sweep's ``run_id``).
+    `benchmarks.run` prints a warning when ``ok`` is false — and exits
+    non-zero under ``--strict`` — so a degraded artifact set never passes
+    silently."""
     return {
         "ok": not MISSING_POINTS and not RUNNER.stats["quarantined"],
+        "run_id": RUNNER.last_run_id,
         "missing_points": [f.to_dict() for f in MISSING_POINTS],
         "runner_stats": dict(RUNNER.stats),
+        "metrics": RUNNER.metrics_snapshot(),
     }
 
 
@@ -348,6 +353,45 @@ def fig19_strands():
     return _cached("fig19_strands", run)
 
 
+def fig21_cycle_breakdown():
+    """Cycle-attribution stack (the ISSUE-7 observability figure).
+
+    Where every simulated cycle goes — issue vs the six stall categories of
+    `repro.obs.attribution` — for BL vs LTRF vs LTRF_conf at Table-2
+    config #7, per workload plus an aggregate row per design.  This is the
+    stacked-bar view of the paper's latency-tolerance mechanism: BL's
+    exposed ``mem_stall`` cycles turn into (mostly hidden)
+    ``prefetch_stall`` + ``issue`` under LTRF.  Fractions sum to 1.0 per
+    row by the engine's attribution invariant."""
+    from benchmarks.sweep_subset import BREAKDOWN_DESIGNS
+    from repro.obs import (
+        CYCLE_CATEGORIES, breakdown_fractions, merge_breakdowns,
+    )
+
+    def run():
+        WL = _workloads()
+        _prefill([(n, design_config(d, table2_config=7))
+                  for n in WL for d in BREAKDOWN_DESIGNS])
+        rows = []
+        agg = {d: [] for d in BREAKDOWN_DESIGNS}
+        for name, w in WL.items():
+            for d in BREAKDOWN_DESIGNS:
+                r = _sim(w, design_config(d, table2_config=7))
+                agg[d].append(r.cycle_breakdown)
+                rows.append({"workload": name, "design": d,
+                             "cycles": r.cycles,
+                             **breakdown_fractions(r.cycle_breakdown)})
+        for d in BREAKDOWN_DESIGNS:
+            total = merge_breakdowns(agg[d])
+            rows.append({"workload": "aggregate", "design": d,
+                         "cycles": sum(total.values()),
+                         **breakdown_fractions(total)})
+        assert all(abs(sum(r[c] for c in CYCLE_CATEGORIES) - 1.0) < 1e-9
+                   for r in rows)
+        return rows
+    return _cached("fig21_breakdown", run)
+
+
 def fig20_warps_per_sm():
     """Fig 20: latency tolerance vs total warps per SM."""
     def run():
@@ -556,6 +600,7 @@ ALL_FIGS = {
     "fig19_strands": fig19_strands,
     "fig20_wpsm": fig20_warps_per_sm,
     "fig20_gpu": fig20_gpu_scale,
+    "fig21_breakdown": fig21_cycle_breakdown,
     "table4_intervals": table4_interval_length,
     "table_code_size": table_code_size,
     "table_mrf_traffic": table_mrf_traffic,

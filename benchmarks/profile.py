@@ -1,0 +1,112 @@
+"""Single-run profiler: cycle breakdown + Chrome trace for one simulation.
+
+The interactive front door to the observability layer (`repro.obs`): run
+one workload on one design and get either (or both of)
+
+* ``--breakdown`` — the cycle-attribution table on stderr-free stdout:
+  every simulated cycle in exactly one category (issue / alu_dep /
+  mem_stall / prefetch_stall / bank_conflict / scheduler_idle / drain),
+  as counts and fractions, plus the headline counters;
+* ``--trace-out trace.json`` — a per-warp Chrome trace-event file.  Open
+  it in ``chrome://tracing`` or https://ui.perfetto.dev: one track per
+  warp (instruction + prefetch spans, activate/swap_out instants) plus a
+  scheduler track carrying the per-cycle stall attribution.  Timestamps
+  are simulated cycles rendered as microseconds.
+
+With neither flag it prints the one-line summary.  Examples::
+
+    python -m benchmarks.profile --workload srad --design LTRF --breakdown
+    python -m benchmarks.profile --workload backprop --design BL \
+        --table2 6 --breakdown
+    python -m benchmarks.profile --workload srad --design LTRF_conf \
+        --num-warps 8 --trace-out /tmp/srad_ltrf.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+from repro.obs import breakdown_fractions, trace_simulation
+from repro.sim import design_config
+from repro.workloads import get_workload, workload_names
+
+
+def profile_run(workload: str, design: str, table2_config: int = 7,
+                num_warps: int = 64,
+                trace_out: pathlib.Path | None = None):
+    """Simulate one (workload, design) point; returns (SimResult, event
+    count or 0).  Tracing is only enabled when `trace_out` is given — the
+    plain path runs the engine exactly as the sweeps do."""
+    w = get_workload(workload)
+    cfg = design_config(design, table2_config=table2_config,
+                        num_warps=num_warps)
+    if trace_out is None:
+        from repro.sim import simulate
+        return simulate(w, cfg), 0
+    res, sink = trace_simulation(w, cfg)
+    sink.write(trace_out)
+    return res, len(sink.events)
+
+
+def _print_breakdown(res) -> None:
+    frac = breakdown_fractions(res.cycle_breakdown)
+    width = max(len(c) for c in res.cycle_breakdown)
+    print(f"{'category':<{width}} {'cycles':>10} {'frac':>7}")
+    for cat, n in res.cycle_breakdown.items():
+        bar = "#" * round(40 * frac[cat])
+        print(f"{cat:<{width}} {n:>10} {frac[cat]:>6.1%} {bar}")
+    print(f"{'total':<{width}} {res.cycles:>10}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--workload", required=True,
+                    help=f"one of: {', '.join(workload_names('all'))}")
+    ap.add_argument("--design", required=True,
+                    help="design point, e.g. BL, RFC, SHRF, LTRF, "
+                         "LTRF_conf, LTRF_plus, Ideal")
+    ap.add_argument("--table2", type=int, default=7,
+                    help="Table-2 RF technology config (default 7: DWM)")
+    ap.add_argument("--num-warps", type=int, default=64)
+    ap.add_argument("--trace-out", type=pathlib.Path, default=None,
+                    metavar="FILE.json",
+                    help="write a Chrome trace-event file of the run "
+                         "(chrome://tracing / Perfetto)")
+    ap.add_argument("--breakdown", action="store_true",
+                    help="print the cycle-attribution table")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the summary as JSON instead of text")
+    args = ap.parse_args(argv)
+
+    res, events = profile_run(args.workload, args.design,
+                              table2_config=args.table2,
+                              num_warps=args.num_warps,
+                              trace_out=args.trace_out)
+    if args.json:
+        out = {"workload": args.workload, "design": args.design,
+               "table2_config": args.table2, "num_warps": args.num_warps,
+               "cycles": res.cycles, "instructions": res.instructions,
+               "ipc": round(res.ipc, 4),
+               "cycle_breakdown": dict(res.cycle_breakdown),
+               "cycle_fractions": {
+                   c: round(v, 4) for c, v in
+                   breakdown_fractions(res.cycle_breakdown).items()}}
+        if args.trace_out is not None:
+            out["trace_out"] = str(args.trace_out)
+            out["trace_events"] = events
+        print(json.dumps(out, indent=1))
+        return 0
+    print(f"{args.workload}/{args.design} tc{args.table2} "
+          f"warps={args.num_warps}: {res.cycles} cycles, "
+          f"{res.instructions} instructions, ipc={res.ipc:.3f}")
+    if args.breakdown:
+        _print_breakdown(res)
+    if args.trace_out is not None:
+        print(f"wrote {events} trace events to {args.trace_out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

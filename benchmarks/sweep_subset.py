@@ -29,6 +29,14 @@ INTERVAL_VERDICT_DESIGN = "LTRF_conf"
 
 GPU_SCHEDULERS = ("two_level", "gto", "lrr")
 
+# The cycle-attribution comparison points (ISSUE 7): the baseline that eats
+# the slow-MRF latency raw, vs the two paper designs that hide it behind
+# interval prefetch.  Pinned at Table-2 config #7 (DWM, 6.3x latency) — the
+# design point where latency tolerance matters most — and deliberately a
+# subset of `sweep_jobs`' tc7 grid, so the figure harness shares sim-cache
+# entries with Fig. 14.
+BREAKDOWN_DESIGNS = ("BL", "LTRF", "LTRF_conf")
+
 # The §4.3 renumbering-ablation comparison points: LTRF with the full ICG
 # renumbering pipeline, the same design with the coloring pass ablated
 # (identity numbering), and the BL reference — all under the arbitrated
@@ -87,6 +95,19 @@ def interval_sweep_jobs(workloads=None, table2_config: int = 7,
         (name, design_config(d, table2_config=table2_config,
                              interval_cap=interval_cap, interval_strategy=s))
         for name in workloads for d in designs for s in strategies
+    ]
+
+
+def breakdown_sweep_jobs(workloads=None, table2_config: int = 7,
+                         designs=BREAKDOWN_DESIGNS,
+                         suite: str | None = None) -> list[tuple[str, SimConfig]]:
+    """The cycle-attribution sweep recorded in BENCH_sim.json's
+    ``cycle_breakdown`` section (and run as the CI obs smoke).  Single-SM
+    configs: run them through `SimRunner.sim` like the main sweep."""
+    names = list(workloads) if workloads else list(workload_names(suite))
+    return [
+        (name, design_config(d, table2_config=table2_config))
+        for name in names for d in designs
     ]
 
 

@@ -1,0 +1,31 @@
+"""Observability layer: cycle attribution, event tracing, sweep metrics.
+
+Three independent pieces (see docs/observability.md):
+
+* `repro.obs.attribution` — the always-on cycle-accounting contract both
+  simulator engines implement (`SimResult.cycle_breakdown`);
+* `repro.obs.trace` — the opt-in per-warp event tracer with Chrome
+  trace-event export (``SimConfig.trace`` / `TraceSink`);
+* `repro.obs.metrics` — counters/gauges/histograms backing the sweep
+  service's operational telemetry (`MetricsRegistry`).
+
+This package never imports ``repro.sim`` at module level — the simulator
+imports *us*, and `trace_simulation` closes the loop lazily.
+"""
+from .attribution import (
+    CYCLE_CATEGORIES, STALL_CATEGORIES, CycleAttributionError,
+    breakdown_fractions, check_breakdown, classify_stall, merge_breakdowns,
+    new_breakdown,
+)
+from .metrics import (
+    SWEEP_METRICS, Counter, Gauge, Histogram, MetricsRegistry,
+)
+from .trace import SCHED_TID, TraceSink, trace_simulation
+
+__all__ = [
+    "CYCLE_CATEGORIES", "STALL_CATEGORIES", "CycleAttributionError",
+    "breakdown_fractions", "check_breakdown", "classify_stall",
+    "merge_breakdowns", "new_breakdown",
+    "SWEEP_METRICS", "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "SCHED_TID", "TraceSink", "trace_simulation",
+]

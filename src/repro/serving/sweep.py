@@ -53,6 +53,7 @@ from dataclasses import asdict, dataclass, field, replace
 
 from repro.core.pipeline import PIPELINE_REV
 from repro.core.plan_cache import PLAN_REV
+from repro.obs.metrics import MetricsRegistry
 from repro.serving import faults
 from repro.sim import SimBudgetExceeded, SimConfig, SimResult, simulate
 from repro.sim.engine import ENGINE_REV
@@ -93,12 +94,31 @@ def sim_key(workload: str, cfg: SimConfig) -> str:
     side makes old cache entries unreachable instead of silently mixing two
     behaviors into one sweep.  ``max_cycles`` is excluded: the watchdog can
     only abort a simulation (raising `SimBudgetExceeded`), never change a
-    completed result, so budgeted and unbudgeted runs share entries."""
+    completed result, so budgeted and unbudgeted runs share entries.
+    ``trace`` is excluded for the same reason: the event tracer observes a
+    run without changing any counter, so traced and untraced runs share
+    entries."""
     cfg_payload = asdict(cfg)
     cfg_payload.pop("max_cycles", None)
+    cfg_payload.pop("trace", None)
     payload = json.dumps([[ENGINE_REV, PLAN_REV, PIPELINE_REV],
                           workload, cfg_payload], sort_keys=True)
     return hashlib.sha1(payload.encode()).hexdigest()[:20]
+
+
+def sweep_run_id(jobs: list[Job]) -> str:
+    """Deterministic run identity for one sweep: the sorted `sim_key` set
+    plus the revision triple, hashed to 12 hex chars.
+
+    Two sweeps over the same jobs under the same engine/compiler revisions
+    share a ``run_id`` (re-runs of a sweep are the *same* run for artifact
+    joining); any change to the job set or the code revisions yields a new
+    one.  Stamped on `SweepReport`, on every sweep `FailureRecord`, on
+    quarantine ``*.failure.json`` records, and on metrics snapshots, so the
+    artifacts of one sweep are joinable."""
+    keys = sorted(sim_key(name, cfg) for name, cfg in jobs)
+    payload = json.dumps([[ENGINE_REV, PLAN_REV, PIPELINE_REV], keys])
+    return hashlib.sha1(payload.encode()).hexdigest()[:12]
 
 
 def default_processes() -> int:
@@ -134,6 +154,8 @@ class FailureRecord:
     detail: str = ""
     attempts: int = 0
     key: str = ""
+    run_id: str = ""               # sweep identity (sweep_run_id); empty for
+                                   # failures outside a prefill sweep
 
     def to_dict(self) -> dict:
         return asdict(self)
@@ -142,6 +164,7 @@ class FailureRecord:
 @dataclass
 class SweepReport:
     """What happened to every job of one `SimRunner.prefill` call."""
+    run_id: str = ""               # deterministic sweep identity (sweep_run_id)
     total: int = 0                 # unique jobs requested
     cached: int = 0                # served from memo/disk before dispatch
     computed: int = 0              # simulated this call
@@ -185,6 +208,7 @@ class ResultStore:
         self.root = pathlib.Path(root)
         self.quarantine_dir = self.root / "quarantine"
         self.quarantines: list[FailureRecord] = []
+        self.run_id = ""  # current sweep identity; stamped on quarantines
         self.stats = {"hits": 0, "misses": 0, "stores": 0,
                       "quarantined": 0, "tmp_gc": 0}
 
@@ -257,14 +281,14 @@ class ResultStore:
             p.replace(self.quarantine_dir / p.name)
         record = {"key": key, "job": label, "reason": reason,
                   "size_bytes": size, "quarantined_at": time.time(),
-                  "quarantined_from": str(p)}
+                  "quarantined_from": str(p), "run_id": self.run_id}
         (self.quarantine_dir / f"{key}.failure.json").write_text(
             json.dumps(record, indent=1))
         workload, _, rest = label.partition("/")
         design, _, _ = rest.partition("/")
         self.quarantines.append(FailureRecord(
             job=label or key, workload=workload, design=design,
-            kind="corrupt", detail=reason, key=key))
+            kind="corrupt", detail=reason, key=key, run_id=self.run_id))
         self.stats["quarantined"] += 1
 
     # -- tmp-file GC -------------------------------------------------------
@@ -333,17 +357,29 @@ class _JobState:
     retries: list[str] = field(default_factory=list)
     failure: FailureRecord | None = None
     done: bool = False
+    enqueued_at: float = 0.0       # when the job (re-)entered the ready heap
+    submitted_at: float = 0.0      # when its latest attempt hit the pool
 
 
 class _Dispatcher:
     """Future-per-job process-pool dispatcher with retry/timeout/recycle."""
 
-    def __init__(self, processes: int, sweep: SweepConfig, on_success) -> None:
+    def __init__(self, processes: int, sweep: SweepConfig, on_success,
+                 metrics: MetricsRegistry | None = None) -> None:
         self.processes = processes
         self.cfg = sweep
         self.on_success = on_success
+        self.metrics = metrics or MetricsRegistry()
         self.pool: ProcessPoolExecutor | None = None
         self.pool_recycles = 0
+
+    # -- telemetry ---------------------------------------------------------
+    def _mark_submit(self, st: _JobState) -> None:
+        st.submitted_at = time.monotonic()
+        self.metrics.histogram(
+            "sweep_queue_wait_s",
+            "seconds jobs waited between ready and pool submit").observe(
+            max(st.submitted_at - st.enqueued_at, 0.0))
 
     # -- pool lifecycle ----------------------------------------------------
     def _fresh_pool(self) -> ProcessPoolExecutor:
@@ -403,6 +439,10 @@ class _Dispatcher:
         return "transient", f"{type(exc).__name__}: {exc}"
 
     def _succeed(self, st: _JobState, payload: dict) -> None:
+        self.metrics.histogram(
+            "sweep_job_latency_s",
+            "seconds from pool submit to completed simulation").observe(
+            max(time.monotonic() - st.submitted_at, 0.0))
         self.on_success(st.job, payload)
         st.done = True
 
@@ -425,6 +465,7 @@ class _Dispatcher:
             if self._charge(st, "crash", "pool broke on submit"):
                 self._requeue(st, ready, now_seq)
             return
+        self._mark_submit(st)
         timeout = None if deadline is None else max(
             deadline - time.monotonic(), 0.0)
         done, _ = wait([fut], timeout=timeout)
@@ -447,12 +488,14 @@ class _Dispatcher:
 
     def _requeue(self, st: _JobState, ready, now_seq) -> None:
         seq = next(now_seq)
+        st.enqueued_at = time.monotonic()
         heapq.heappush(
-            ready, (time.monotonic() + self._backoff(st.attempts), seq, st))
+            ready, (st.enqueued_at + self._backoff(st.attempts), seq, st))
 
     # -- main loop ---------------------------------------------------------
     def run(self, jobs: list[Job]) -> tuple[list[_JobState], int]:
-        states = [_JobState(job=j) for j in jobs]
+        t0 = time.monotonic()
+        states = [_JobState(job=j, enqueued_at=t0) for j in jobs]
         seq_counter = iter(range(1, 1 << 30))
         ready: list[tuple[float, int, _JobState]] = [
             (0.0, -len(states) + i, st) for i, st in enumerate(states)]
@@ -478,6 +521,7 @@ class _Dispatcher:
                         if self._charge(st, "crash", "pool broke on submit"):
                             self._requeue(st, ready, seq_counter)
                         continue
+                    self._mark_submit(st)
                     inflight[fut] = (st, deadline)
                 if not inflight:
                     if ready:
@@ -566,6 +610,11 @@ class SimRunner:
         self.sweep_config = sweep or SweepConfig()
         self._memo: dict[Job, SimResult] = {}
         self.failures: dict[Job, FailureRecord] = {}
+        # Operational telemetry (repro.obs.metrics): counters/histograms
+        # accumulated across every prefill/sim of this runner's lifetime;
+        # snapshot with `metrics_snapshot` (JSON) or `metrics.to_prometheus`.
+        self.metrics = MetricsRegistry()
+        self.last_run_id = ""
         self.stats = {"memo_hits": 0, "disk_hits": 0, "computed": 0,
                       "retried": 0, "failed": 0, "quarantined": 0,
                       "pool_recycles": 0, "tmp_gc": 0}
@@ -609,11 +658,18 @@ class SimRunner:
         res = self._memo.get(job)
         if res is not None:
             self.stats["memo_hits"] += 1
+            self.metrics.counter("sweep_cache_hits_total",
+                                 "memo/disk cache hits").inc()
             return res
         res = self._disk_load(job)
         if res is not None:
             self.stats["disk_hits"] += 1
+            self.metrics.counter("sweep_cache_hits_total",
+                                 "memo/disk cache hits").inc()
             self._memo[job] = res
+        else:
+            self.metrics.counter("sweep_cache_misses_total",
+                                 "memo/disk cache misses").inc()
         return res
 
     # -- public API --------------------------------------------------------
@@ -671,6 +727,8 @@ class SimRunner:
         missing.  Callers that need hard failure check ``report.ok``."""
         t0 = time.time()
         q_before = self.store.stats["quarantined"]
+        run_id = sweep_run_id(jobs)
+        self.last_run_id = self.store.run_id = run_id
         misses: list[Job] = []
         seen: set[Job] = set()
         for job in jobs:
@@ -679,7 +737,8 @@ class SimRunner:
             seen.add(job)
             if self._lookup(job) is None:
                 misses.append(job)
-        report = SweepReport(total=len(seen), cached=len(seen) - len(misses))
+        report = SweepReport(run_id=run_id, total=len(seen),
+                             cached=len(seen) - len(misses))
         if misses:
             if self.processes <= 1 or len(misses) == 1:
                 self._prefill_inline(misses, report)
@@ -694,7 +753,27 @@ class SimRunner:
         self.stats["retried"] += sum(report.retried.values())
         self.stats["failed"] = len(self.failures)
         self.stats["pool_recycles"] += report.pool_recycles
+        m = self.metrics
+        m.counter("sweep_jobs_total", "unique jobs requested").inc(report.total)
+        m.counter("sweep_jobs_cached",
+                  "jobs served from memo/disk cache").inc(report.cached)
+        m.counter("sweep_jobs_computed",
+                  "jobs simulated").inc(report.computed)
+        m.counter("sweep_jobs_failed",
+                  "jobs with no result after retries").inc(len(report.failed))
+        m.counter("sweep_retries_total",
+                  "retried job attempts").inc(sum(report.retried.values()))
+        m.counter("sweep_pool_recycles_total",
+                  "process-pool teardowns").inc(report.pool_recycles)
+        m.counter("sweep_quarantined_total",
+                  "cache entries quarantined").inc(len(report.quarantined))
         return report
+
+    def metrics_snapshot(self) -> dict:
+        """JSON-ready metrics snapshot, stamped with the last sweep's
+        ``run_id`` and the runner's layered-cache stats."""
+        return self.metrics.snapshot(run_id=self.last_run_id,
+                                     runner_stats=dict(self.stats))
 
     # -- dispatch backends -------------------------------------------------
     def _record_outcomes(self, states, report: SweepReport) -> None:
@@ -703,6 +782,7 @@ class SimRunner:
                 report.retried[job_label(st.job)] = len(st.retries)
                 report.retry_kinds[job_label(st.job)] = list(st.retries)
             if st.failure is not None:
+                st.failure.run_id = report.run_id
                 report.failed.append(st.failure)
                 self.failures[st.job] = st.failure
             else:
@@ -714,9 +794,14 @@ class SimRunner:
         cfgd = self.sweep_config
         states = []
         for job in misses:
-            st = _JobState(job=job)
+            st = _JobState(job=job, enqueued_at=time.monotonic())
             states.append(st)
             while not st.done:
+                st.submitted_at = time.monotonic()
+                self.metrics.histogram(
+                    "sweep_queue_wait_s",
+                    "seconds jobs waited between ready and pool submit"
+                ).observe(max(st.submitted_at - st.enqueued_at, 0.0))
                 try:
                     _, _, payload = _run_job(job, cfgd.watchdog_max_cycles)
                 except Exception as e:  # noqa: BLE001 - classified below
@@ -739,6 +824,10 @@ class SimRunner:
                         attempts=st.attempts, key=sim_key(name, cfg))
                     st.done = True
                 else:
+                    self.metrics.histogram(
+                        "sweep_job_latency_s",
+                        "seconds from pool submit to completed simulation"
+                    ).observe(max(time.monotonic() - st.submitted_at, 0.0))
                     res = SimResult(**payload)
                     self._memo[job] = res
                     self._disk_store(job, res)
@@ -754,7 +843,8 @@ class SimRunner:
             self._disk_store(job, res)
             self.stats["computed"] += 1
 
-        dispatcher = _Dispatcher(self.processes, self.sweep_config, on_success)
+        dispatcher = _Dispatcher(self.processes, self.sweep_config, on_success,
+                                 metrics=self.metrics)
         states, recycles = dispatcher.run(misses)
         report.pool_recycles = recycles
         report.computed = 0

@@ -46,6 +46,10 @@ from heapq import heappop, heappush, heapreplace
 from repro.core.pipeline import INTERVAL_STRATEGIES, parse_interval_strategy
 from repro.core.plan_cache import compile_for_sim
 from repro.core.ir import Instr, Program
+from repro.obs.attribution import (
+    check_breakdown, classify_stall, new_breakdown,
+)
+from repro.obs.trace import SCHED_TID, TraceSink
 from repro.workloads.suite import Workload
 
 DESIGNS = ("BL", "RFC", "SHRF", "LTRF", "LTRF_conf", "LTRF_plus", "Ideal")
@@ -55,7 +59,8 @@ DESIGNS = ("BL", "RFC", "SHRF", "LTRF", "LTRF_conf", "LTRF_plus", "Ideal")
 # engine-behavior revisions.
 # rev 2: bank_model/renumber config axes + bank-conflict counters.
 # rev 3: interval_strategy config axis + prefetch_stall_cycles counter.
-ENGINE_REV = 3
+# rev 4: cycle_breakdown attribution (repro.obs) carried on every result.
+ENGINE_REV = 4
 
 # Designs with a software-managed register cache (two-level scheduling).
 _CACHED_DESIGNS = frozenset({"LTRF", "LTRF_conf", "LTRF_plus", "SHRF"})
@@ -134,6 +139,13 @@ class SimConfig:
     bank_model: str = "none"       # RF bank arbitration (BANK_MODELS)
     renumber: str = "icg"          # renumbering ablation axis (RENUMBER_MODES)
     interval_strategy: str = "paper"  # interval formation (INTERVAL_STRATEGIES)
+    trace: bool = False            # opt-in per-warp event tracer (repro.obs.
+                                   # trace): records issue/stall/prefetch/swap
+                                   # events on Simulator.trace for Chrome
+                                   # trace-event export.  Pure observation —
+                                   # never changes counters — so the sweep
+                                   # cache (serving.sweep.sim_key) excludes it
+                                   # like max_cycles.
 
     @property
     def mrf_cycles(self) -> float:
@@ -169,6 +181,10 @@ class SimResult:
     activations: int = 0
     bank_conflicts: int = 0        # extra serialization rounds (arbitrated)
     bank_conflict_cycles: int = 0  # latency cycles those rounds added
+    cycle_breakdown: dict[str, int] = field(default_factory=dict)
+    # ^ where every cycle went: one entry per repro.obs.attribution category
+    #   (issue/alu_dep/mem_stall/prefetch_stall/bank_conflict/scheduler_idle/
+    #   drain); both engines enforce sum(cycle_breakdown.values()) == cycles.
 
     @property
     def ipc(self) -> float:
@@ -305,6 +321,9 @@ class Simulator:
         self._bank_cycle = -1
         self._rd_use: list[int] = []
         self._wr_use: list[int] = []
+        # Opt-in event tracer (None = disabled: the hot loop pays one `is
+        # not None` test per hook and nothing else).
+        self.trace: TraceSink | None = TraceSink() if cfg.trace else None
 
     # ------------------------------------------------------------------ static
     def _occupancy(self) -> int:
@@ -330,6 +349,11 @@ class Simulator:
         use_gto = self._sched == "gto"
         resident_cap = res.resident_warps
         active_cap = min(cfg.active_slots, resident_cap) if two_level else resident_cap
+        # Kernel-tail threshold for cycle attribution: once retirement leaves
+        # fewer live warps than one scheduler's worth (`active_slots`),
+        # zero-issue cycles are the unavoidable drain of the last warps, not
+        # a latency-tolerance failure (same for every scheduler policy).
+        tail_cap = min(cfg.active_slots, resident_cap)
 
         warps = [_Warp(wid=i, block=self.prog.entry) for i in range(cfg.num_warps)]
         pending = list(range(cfg.num_warps))
@@ -363,6 +387,8 @@ class Simulator:
                 resident.append(wid)
                 heappush(ready_q, wid)
 
+        trace = self.trace
+
         def activate(cycle: int) -> None:
             while len(active) < active_cap:
                 while ready_q and warps[ready_q[0]].status != INACTIVE_READY:
@@ -372,6 +398,8 @@ class Simulator:
                 wid = heappop(ready_q)
                 wp = warps[wid]
                 res.activations += 1
+                if trace is not None:
+                    trace.instant(wid, "activate", cycle)
                 if cached:
                     self._start_prefetch(wp, cycle, force=True)
                 active.append(wid)
@@ -383,6 +411,9 @@ class Simulator:
             active.remove(wid)
             wp.status = INACTIVE_WAIT
             wp.ready_at = int(until)
+            if trace is not None:
+                trace.instant(wid, "swap_out", cycle,
+                              {"until": wp.ready_at})
             heappush(wake, (wp.ready_at, wid))
             if cached and wp.interval >= 0:
                 ws = self.pf_ops.get(wp.interval)
@@ -399,6 +430,12 @@ class Simulator:
 
         issue_width = cfg.issue_width
         max_cycles = cfg.max_cycles
+        # Cycle attribution (repro.obs.attribution): the loop below advances
+        # `cycle` at exactly two sites — +1 after an issuing cycle, or a jump
+        # to the next event after a zero-issue cycle — and every advance is
+        # charged to exactly one category, so the breakdown sums to the final
+        # cycle count by construction (and is hard-checked at the end).
+        bd = res.cycle_breakdown = new_breakdown()
         cycle = 0
         guard = 0
         while True:
@@ -422,6 +459,7 @@ class Simulator:
             activate(cycle)
 
             issued_now = 0
+            struct_stall = False
             mem_stalled: list[tuple[int, float]] = []
             for _ in range(issue_width):
                 wid = (self._pick_gto(warps, active, cycle) if use_gto else
@@ -432,13 +470,18 @@ class Simulator:
                     issued_now += 1
                     if use_gto:
                         self._gto_last = wid
-                elif self._stall_pure:
-                    # Pure structural stall: the failed issue consumed nothing,
-                    # so the seed's remaining issue slots would re-pick this
-                    # same warp and fail identically.  (A collector stall that
-                    # already consumed MRF bandwidth tokens is NOT pure — the
-                    # retry must run, token state changed.)
-                    break
+                else:
+                    # a ready warp blocked by RF structure (collector / MRF
+                    # bandwidth): remembered for cycle attribution
+                    struct_stall = True
+                    if self._stall_pure:
+                        # Pure structural stall: the failed issue consumed
+                        # nothing, so the seed's remaining issue slots would
+                        # re-pick this same warp and fail identically.  (A
+                        # collector stall that already consumed MRF bandwidth
+                        # tokens is NOT pure — the retry must run, token state
+                        # changed.)
+                        break
 
             if two_level:
                 for wid, until in mem_stalled:
@@ -457,12 +500,22 @@ class Simulator:
                 break
 
             if issued_now:
+                bd["issue"] += 1
                 cycle += 1
             else:
-                cycle = self._next_event(warps, active, cycle)
+                drain = (pending_pos >= len(pending)
+                         and len(resident) < tail_cap)
+                cat = self._classify_stall(warps, active, cycle,
+                                           struct_stall, drain)
+                nxt = self._next_event(warps, active, cycle)
+                bd[cat] += nxt - cycle
+                if trace is not None:
+                    trace.span(SCHED_TID, cat, cycle, nxt - cycle)
+                cycle = nxt
 
         res.cycles = cycle
         res.instructions = sum(w.issued for w in warps)
+        check_breakdown(bd, cycle, cfg.design, self.w.name)
         return res
 
     # ----------------------------------------------------------------- helpers
@@ -503,6 +556,10 @@ class Simulator:
         heapreplace(pf, done)
         wp.status = PREFETCH
         wp.ready_at = done
+        if self.trace is not None:
+            self.trace.span(wp.wid, "prefetch", cycle, done - cycle,
+                            {"interval": iid, "regs": len(fetch),
+                             "rounds": rounds})
         heappush(self._wake, (done, wp.wid))
         self.result.prefetch_ops += 1
         self.result.prefetch_cycles += int(lat)
@@ -778,6 +835,8 @@ class Simulator:
         if ins.op == "bra":
             wp.issued += 1
             wp.ver += 1
+            if self.trace is not None:
+                self.trace.span(wp.wid, "bra", cycle, 1)
             if self._branch_taken(wp, ins):
                 wp.block, wp.idx = ins.target, 0
             else:
@@ -789,6 +848,8 @@ class Simulator:
             wp.ver += 1
             wp.status = DONE
             self._done_dirty = True
+            if self.trace is not None:
+                self.trace.span(wp.wid, "exit", cycle, 1)
             return True
 
         read_lat = self._operand_latency(wp, ins, rfc_lru, cycle)
@@ -815,6 +876,10 @@ class Simulator:
                 wlat = wlat + pen
                 res.bank_conflicts += wr_extra
                 res.bank_conflict_cycles += pen
+            if self.trace is not None and (rd_extra or wr_extra):
+                self.trace.instant(wp.wid, "bank_conflict", cycle,
+                                   {"rd_rounds": rd_extra,
+                                    "wr_rounds": wr_extra})
         if ins.op == "set":
             done_at += cfg.alu_cycles
             if ins.pdst is not None:
@@ -830,6 +895,9 @@ class Simulator:
             for d in ins.dsts:
                 wp.reg_ready[d] = done_at
                 wp.reg_from_mem[d] = False
+        if self.trace is not None:
+            self.trace.span(wp.wid, ins.op, cycle, int(done_at) - cycle,
+                            {"block": wp.block})
         wp.idx += 1
         self._maybe_prefetch_edge(wp, cycle)
         return True
@@ -862,6 +930,43 @@ class Simulator:
         wp.diamond_visits[key] = v + 1
         h = (wp.wid * 31 + v * 17 + self.cfg.seed) & 0xFF
         return bool(h & 1)
+
+    def _classify_stall(self, warps, active, cycle: int,
+                        struct_stall: bool, drain: bool) -> str:
+        """Attribute one zero-issue cycle (see repro.obs.attribution).
+
+        Scans the active set for the observable stall causes and defers the
+        precedence decision to `classify_stall`, which the golden oracle
+        calls with identically-derived booleans — attribution is part of the
+        bit-identical `SimResult` contract.  Reading a warp's pending
+        operands may refresh its readiness cache via `_fetch` (the same
+        idempotent block-walk `_next_event` performs); it never changes
+        schedulable state.
+        """
+        if drain or struct_stall:
+            return classify_stall(drain, struct_stall, False, False, False)
+        saw_prefetch = saw_mem = saw_dep = False
+        for wid in active:
+            wp = warps[wid]
+            st = wp.status
+            if st == PREFETCH:
+                saw_prefetch = True
+            elif st == ACTIVE:
+                if wp.c_ver != wp.ver:
+                    ins = self._fetch(wp)
+                    if ins is None:
+                        continue
+                    self._refresh_ready(wp, ins)
+                for t in wp.c_mem:
+                    if t > cycle:
+                        saw_mem = True
+                        break
+                if not saw_dep:
+                    for t in wp.c_times:
+                        if t > cycle:
+                            saw_dep = True
+                            break
+        return classify_stall(False, False, saw_prefetch, saw_mem, saw_dep)
 
     def _next_event(self, warps, active, cycle: int) -> int:
         """Earliest future time anything can change state.

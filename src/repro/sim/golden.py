@@ -20,6 +20,9 @@ from repro.core.intervals import form_register_intervals
 from repro.core.ir import Instr
 from repro.core.prefetch import prefetch_schedule
 from repro.core.renumber import renumber_registers
+from repro.obs.attribution import (
+    check_breakdown, classify_stall, new_breakdown,
+)
 from repro.workloads.suite import Workload
 
 from .engine import (
@@ -84,6 +87,8 @@ class GoldenSimulator:
         two_level = cached
         resident_cap = res.resident_warps
         active_cap = min(cfg.active_slots, resident_cap) if two_level else resident_cap
+        # Kernel-tail threshold for cycle attribution (see engine.run).
+        tail_cap = min(cfg.active_slots, resident_cap)
 
         warps = [_Warp(wid=i, block=self.prog.entry) for i in range(cfg.num_warps)]
         pending = list(range(cfg.num_warps))
@@ -135,6 +140,10 @@ class GoldenSimulator:
         admit()
         activate(0)
 
+        # Cycle attribution (repro.obs.attribution): charged at the same two
+        # advance sites as the fast engine, from identically-derived state —
+        # `cycle_breakdown` is part of the bit-identical SimResult contract.
+        bd = res.cycle_breakdown = new_breakdown()
         cycle = 0
         max_cycles = cfg.max_cycles
         guard = 0
@@ -155,6 +164,7 @@ class GoldenSimulator:
             activate(cycle)
 
             issued_now = 0
+            struct_stall = False
             mem_stalled: list[tuple[int, float]] = []
             for _ in range(cfg.issue_width):
                 wid = self._pick(warps, active, cycle, mem_stalled)
@@ -162,6 +172,10 @@ class GoldenSimulator:
                     break
                 if self._issue(warps[wid], cycle, rfc_lru):
                     issued_now += 1
+                else:
+                    # a ready warp blocked by RF structure (collector / MRF
+                    # bandwidth): remembered for cycle attribution
+                    struct_stall = True
 
             if two_level:
                 for wid, until in mem_stalled:
@@ -178,12 +192,19 @@ class GoldenSimulator:
                 break
 
             if issued_now:
+                bd["issue"] += 1
                 cycle += 1
             else:
-                cycle = self._next_event(warps, resident, cycle)
+                drain = not pending and len(resident) < tail_cap
+                cat = self._classify_stall(warps, active, cycle,
+                                           struct_stall, drain)
+                nxt = self._next_event(warps, resident, cycle)
+                bd[cat] += nxt - cycle
+                cycle = nxt
 
         res.cycles = cycle
         res.instructions = sum(w.issued for w in warps)
+        check_breakdown(bd, cycle, cfg.design, self.w.name)
         return res
 
     # ----------------------------------------------------------------- helpers
@@ -453,6 +474,39 @@ class GoldenSimulator:
         wp.diamond_visits[key] = v + 1
         h = (wp.wid * 31 + v * 17 + self.cfg.seed) & 0xFF
         return bool(h & 1)
+
+    def _classify_stall(self, warps, active, cycle: int,
+                        struct_stall: bool, drain: bool) -> str:
+        """Attribute one zero-issue cycle (see repro.obs.attribution).
+
+        Derives the same booleans as the fast engine's classifier — a
+        prefetching warp in the active set, a pending memory-produced
+        source, any pending operand — by direct scan, and defers the
+        precedence decision to the shared `classify_stall`."""
+        if drain or struct_stall:
+            return classify_stall(drain, struct_stall, False, False, False)
+        saw_prefetch = saw_mem = saw_dep = False
+        for wid in active:
+            wp = warps[wid]
+            if wp.status == PREFETCH:
+                saw_prefetch = True
+            elif wp.status == ACTIVE:
+                ins = self._fetch(wp)
+                if ins is None:
+                    continue
+                pend = False
+                for s in ins.srcs:
+                    t = wp.reg_ready.get(s, 0)
+                    if t > cycle:
+                        pend = True
+                        if wp.reg_from_mem.get(s):
+                            saw_mem = True
+                for p in ins.psrcs:
+                    if wp.pred_ready.get(p, 0) > cycle:
+                        pend = True
+                if pend:
+                    saw_dep = True
+        return classify_stall(False, False, saw_prefetch, saw_mem, saw_dep)
 
     def _next_event(self, warps, resident, cycle: int) -> int:
         nxt = [min(self._col_free)] if self._col_free else []

@@ -54,8 +54,9 @@ identically (there is no active-slot restriction without a register cache);
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
+from dataclasses import dataclass, field, replace
 
+from repro.obs.attribution import merge_breakdowns
 from repro.workloads.suite import Workload
 
 from .engine import SCHEDULERS, SimConfig, SimResult, simulate
@@ -148,6 +149,10 @@ class GpuResult:
     activations: int = 0
     bank_conflicts: int = 0
     bank_conflict_cycles: int = 0
+    cycle_breakdown: dict[str, int] = field(default_factory=dict)
+    # ^ per-category cycle attribution summed over SMs (repro.obs): the
+    #   breakdown accounts for every SM-cycle simulated, so it sums to
+    #   sum(per_sm cycles) — NOT to the chip-level `cycles` (slowest SM).
     per_sm: tuple[SimResult, ...] = ()
 
     @property
@@ -193,6 +198,7 @@ def aggregate(cfg: SimConfig, results: list[SimResult],
         activations=sum(r.activations for r in results),
         bank_conflicts=sum(r.bank_conflicts for r in results),
         bank_conflict_cycles=sum(r.bank_conflict_cycles for r in results),
+        cycle_breakdown=merge_breakdowns(r.cycle_breakdown for r in results),
         per_sm=tuple(results),
     )
 

@@ -32,7 +32,7 @@ MARKDOWN_FILES = sorted([ROOT / "README.md", *DOCS.glob("*.md")])
 
 def test_docs_tree_exists():
     for name in ("architecture.md", "simulator.md", "configuration.md",
-                 "compiler.md", "serving.md"):
+                 "compiler.md", "serving.md", "observability.md"):
         assert (DOCS / name).is_file(), f"docs/{name} missing"
 
 
@@ -132,8 +132,30 @@ def test_markdown_relative_links_resolve(md):
 def test_docs_are_linked_from_readme():
     readme = (ROOT / "README.md").read_text()
     for name in ("architecture.md", "simulator.md", "configuration.md",
-                 "serving.md"):
+                 "serving.md", "observability.md"):
         assert f"docs/{name}" in readme, f"README does not index docs/{name}"
+
+
+def test_observability_doc_names_every_category_and_metric():
+    """docs/observability.md documents every cycle-attribution category and
+    every sweep-service metric name, plus the layer's API surface — a new
+    category or metric cannot land undocumented."""
+    from repro.obs import CYCLE_CATEGORIES, SWEEP_METRICS
+
+    doc = (DOCS / "observability.md").read_text()
+    for cat in CYCLE_CATEGORIES:
+        assert f"`{cat}`" in doc, f"cycle category {cat!r} undocumented"
+    for metric in SWEEP_METRICS:
+        assert f"`{metric}`" in doc, f"sweep metric {metric!r} undocumented"
+    for name in ("cycle_breakdown", "check_breakdown", "classify_stall",
+                 "CycleAttributionError", "TraceSink", "trace_simulation",
+                 "MetricsRegistry", "metrics_snapshot", "to_prometheus",
+                 "sweep_run_id", "SCHED_TID", "--obs-smoke", "--strict",
+                 "chrome://tracing", "fig21_breakdown"):
+        assert name in doc, f"{name} undocumented in observability.md"
+    # the configuration reference must cover the new knob and counter too
+    cfg_doc = CONFIG_DOC.read_text()
+    assert "`trace`" in cfg_doc and "`cycle_breakdown`" in cfg_doc
 
 
 def test_serving_doc_names_every_sweep_knob():

@@ -316,6 +316,96 @@ def test_fuzz_watchdog_budget(seed):
            (g.design, g.workload, g.budget, g.cycles), seed
 
 
+# -------------------------------------- observability fuzzed invariants
+
+@pytest.mark.parametrize("seed", range(700, 718))
+def test_fuzz_breakdown_sums_to_cycles(seed):
+    """ISSUE 7 hard invariant: every simulated cycle lands in exactly one
+    category of `repro.obs.CYCLE_CATEGORIES` — the breakdown sums exactly
+    to the run's cycle count on random programs under random configs,
+    including the schedulers and bank models the golden oracle doesn't
+    implement.  (The engine itself re-checks this via `check_breakdown`;
+    asserting here keeps the contract pinned even if that guard is ever
+    relaxed.)"""
+    from repro.obs import CYCLE_CATEGORIES
+
+    w = random_workload(seed)
+    rng = random.Random(seed)
+    cfg = replace(random_config(seed),
+                  scheduler=rng.choice(("two_level", "gto", "lrr")),
+                  bank_model=rng.choice(("none", "arbitrated")))
+    r = simulate(w, cfg)
+    bd = r.cycle_breakdown
+    assert tuple(bd) == CYCLE_CATEGORIES, seed
+    assert sum(bd.values()) == r.cycles, (seed, cfg.design, bd, r.cycles)
+    assert all(v >= 0 for v in bd.values()), (seed, bd)
+    assert bd["issue"] > 0, seed  # every program retires something
+    # SHRF prefetches strands, so it can stall on prefetch like LTRF;
+    # the designs with no prefetch mechanism at all must never show it
+    if cfg.design in ("BL", "RFC", "Ideal"):
+        assert bd["prefetch_stall"] == 0, (seed, cfg.design)
+
+
+@pytest.mark.parametrize("seed", range(750, 760))
+def test_fuzz_trace_enabled_is_counter_neutral(seed):
+    """The per-warp tracer is pure observation: enabling it must not
+    perturb a single counter — `SimResult` equality with the untraced run
+    (and `trace` is excluded from the sweep cache key for the same
+    reason)."""
+    from repro.serving.sweep import sim_key
+
+    w = random_workload(seed)
+    cfg = random_config(seed)
+    traced_cfg = replace(cfg, trace=True)
+    assert simulate(w, traced_cfg) == simulate(w, cfg), seed
+    assert sim_key(w.name, traced_cfg) == sim_key(w.name, cfg), seed
+
+
+@pytest.mark.parametrize("seed", range(760, 766))
+def test_fuzz_trace_sink_spans_cover_the_run(seed):
+    """A traced run's event stream is well-formed: every span/instant sits
+    inside [0, cycles], warp track ids are real warps, and the scheduler
+    track's stall spans are exactly the run's non-issue cycles."""
+    from repro.obs import SCHED_TID, STALL_CATEGORIES, trace_simulation
+
+    w = random_workload(seed)
+    cfg = random_config(seed)
+    res, sink = trace_simulation(w, cfg)
+    assert sink.events, seed
+    for ev in sink.events:
+        assert 0 <= ev["ts"] <= res.cycles, (seed, ev)
+        # warp instruction spans run to value-ready and may legitimately
+        # outlive the run (a result nothing consumed); the scheduler
+        # track's stall spans are cycle accounting and must stay inside it
+        if ev["ph"] == "X" and ev["tid"] == SCHED_TID:
+            assert ev["ts"] + ev["dur"] <= res.cycles, (seed, ev)
+    sched_stall = sum(ev["dur"] for ev in sink.events
+                      if ev["tid"] == SCHED_TID and ev["ph"] == "X"
+                      and ev["name"] in STALL_CATEGORIES)
+    assert sched_stall == sum(res.cycle_breakdown[c]
+                              for c in STALL_CATEGORIES), seed
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_fuzz_gpu_breakdown_aggregation(seed):
+    """GPU-level breakdown is the per-SM merge: category-wise sums match,
+    and the total equals the sum of per-SM cycle counts (NOT the chip's
+    max-over-SMs `cycles`)."""
+    from repro.obs import CYCLE_CATEGORIES
+
+    w = random_workload(800 + seed)
+    rng = random.Random(seed)
+    cfg = replace(random_config(800 + seed), num_sms=rng.randint(2, 4),
+                  scheduler=rng.choice(("two_level", "gto", "lrr")))
+    g = simulate_gpu(w, cfg)
+    assert tuple(g.cycle_breakdown) == CYCLE_CATEGORIES
+    for c in CYCLE_CATEGORIES:
+        assert g.cycle_breakdown[c] == \
+            sum(r.cycle_breakdown[c] for r in g.per_sm), (seed, c)
+    assert sum(g.cycle_breakdown.values()) == \
+        sum(r.cycles for r in g.per_sm), seed
+
+
 @pytest.mark.parametrize("seed", range(8))
 def test_fuzz_gpu_aggregation_identities(seed):
     """Multi-SM runs: instructions sum over SMs, cycles are the slowest SM,

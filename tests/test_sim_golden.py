@@ -96,6 +96,39 @@ def test_listing1_counters_pinned(design):
     assert golden_simulate(w, cfg) == r
 
 
+# Exact cycle attribution (repro.obs) for the same Listing-1 pins, in
+# CYCLE_CATEGORIES order (issue, alu_dep, mem_stall, prefetch_stall,
+# bank_conflict, scheduler_idle, drain).  Each row sums to the design's
+# pinned cycle count above; the story the numbers pin is the paper's:
+# BL exposes the slow MRF + memory as 517 mem-stall cycles, while the
+# LTRF designs shrink that to ~5 by prefetching intervals (83 cycles of
+# exposed prefetch) and swapping waiting warps out (scheduler_idle).
+LISTING1_BREAKDOWN = {
+    "BL":        (107, 32, 517, 0, 0, 0, 151),
+    "RFC":       (98, 8, 465, 0, 0, 0, 16),
+    "SHRF":      (120, 0, 0, 324, 0, 218, 113),
+    "LTRF":      (96, 4, 5, 83, 0, 389, 51),
+    "LTRF_conf": (96, 4, 5, 83, 0, 389, 51),
+    "LTRF_plus": (91, 9, 13, 0, 0, 412, 25),
+    "Ideal":     (95, 0, 452, 0, 0, 0, 30),
+}
+
+
+@pytest.mark.parametrize("design", DESIGNS)
+def test_listing1_cycle_breakdown_pinned(design):
+    from repro.obs import CYCLE_CATEGORIES
+
+    w = listing1_workload()
+    cfg = design_config(design, table2_config=7, num_warps=16)
+    r = simulate(w, cfg)
+    assert tuple(r.cycle_breakdown) == CYCLE_CATEGORIES
+    got = tuple(r.cycle_breakdown.values())
+    assert got == LISTING1_BREAKDOWN[design], (design, got)
+    assert sum(got) == r.cycles == LISTING1_GOLDEN[design][0]
+    # and the golden engine attributes identically
+    assert golden_simulate(w, cfg).cycle_breakdown == r.cycle_breakdown
+
+
 # Exact counters for the lifted ltrf_matmul reference (the traced frontend's
 # flagship kernel) at Table-2 config #7, 16 warps: behavioural drift in the
 # jaxpr lifter, the register allocator, OR the engine shows up here.
