@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 import pathlib
 
 # Canonical sweep-service metric names (docs/observability.md documents every
@@ -85,9 +86,11 @@ class Histogram:
 
     @staticmethod
     def _nearest_rank(sorted_samples: list[float], q: float) -> float:
-        # nearest-rank: ceil(q*N)-th smallest sample (1-indexed)
+        # nearest-rank: ceil(q*N)-th smallest sample (1-indexed).  The old
+        # int-scaling trick (-(-int(q*n*100) // 100)) truncated q*n*100 to an
+        # int *before* ceiling, so e.g. (q=0.95, n=20) -> 19 instead of 20.
         n = len(sorted_samples)
-        rank = max(1, -(-int(q * n * 100) // 100))  # ceil without float fuzz
+        rank = max(1, math.ceil(q * n))
         return sorted_samples[min(rank, n) - 1]
 
     def summary(self) -> dict:

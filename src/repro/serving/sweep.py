@@ -66,6 +66,31 @@ SIMCACHE = pathlib.Path(os.environ.get(
 
 Job = tuple[str, SimConfig]
 
+# In 'auto' batch mode the vectorized engine only engages once a prefill
+# has this many supported misses: below that, jit compilation costs more
+# than it saves and per-job latency histograms lose their meaning.
+# Explicit opt-in (batch=True or REPRO_SIM_BATCH=1) batches everything it
+# can.
+_MIN_AUTO_BATCH = 8
+
+
+def _auto_batch_ok() -> bool:
+    """True when jax is already loaded with a non-CPU backend.
+
+    Deliberately refuses to *import* jax: a cache probe should not cost a
+    multi-second import, and if nothing else in the process needed jax the
+    host is almost certainly a plain CPU box where batching loses anyway
+    (see `SimRunner._batch_mode`)."""
+    import sys
+
+    j = sys.modules.get("jax")
+    if j is None:
+        return False
+    try:
+        return j.devices()[0].platform != "cpu"
+    except Exception:  # noqa: BLE001 - any probe failure means "no"
+        return False
+
 # Failure/retry classification (FailureRecord.kind):
 #   transient - the job raised an ordinary exception (incl. injected faults)
 #   crash     - the job's worker process died (BrokenProcessPool)
@@ -602,12 +627,17 @@ class SimRunner:
     def __init__(self, processes: int | None = None,
                  disk_cache: bool = True,
                  cache_dir: pathlib.Path | None = None,
-                 sweep: SweepConfig | None = None) -> None:
+                 sweep: SweepConfig | None = None,
+                 batch: bool | None = None) -> None:
         self.processes = processes if processes is not None else default_processes()
         self.disk_cache = disk_cache
         self.cache_dir = pathlib.Path(cache_dir) if cache_dir else SIMCACHE
         self.store = ResultStore(self.cache_dir)
         self.sweep_config = sweep or SweepConfig()
+        # Batch-engine policy: True/False force it, None defers to the
+        # REPRO_SIM_BATCH env var ("1"/"0"), else auto — batch large
+        # cache-miss sweeps when there is no process pool to lean on.
+        self.batch = batch
         self._memo: dict[Job, SimResult] = {}
         self.failures: dict[Job, FailureRecord] = {}
         # Operational telemetry (repro.obs.metrics): counters/histograms
@@ -616,8 +646,8 @@ class SimRunner:
         self.metrics = MetricsRegistry()
         self.last_run_id = ""
         self.stats = {"memo_hits": 0, "disk_hits": 0, "computed": 0,
-                      "retried": 0, "failed": 0, "quarantined": 0,
-                      "pool_recycles": 0, "tmp_gc": 0}
+                      "batched": 0, "retried": 0, "failed": 0,
+                      "quarantined": 0, "pool_recycles": 0, "tmp_gc": 0}
         if self.disk_cache:
             # sweep startup garbage-collects tmp files leaked by writers
             # that crashed mid-publish
@@ -739,11 +769,20 @@ class SimRunner:
                 misses.append(job)
         report = SweepReport(run_id=run_id, total=len(seen),
                              cached=len(seen) - len(misses))
+        batch_states: list[_JobState] = []
         if misses:
-            if self.processes <= 1 or len(misses) == 1:
-                self._prefill_inline(misses, report)
-            else:
-                self._prefill_pool(misses, report)
+            mode = self._batch_mode()
+            if mode == "on" or (mode == "auto" and _auto_batch_ok()):
+                misses, batch_states = self._prefill_batch(
+                    misses, min_jobs=_MIN_AUTO_BATCH if mode == "auto" else 1)
+            if misses:
+                if self.processes <= 1 or len(misses) == 1:
+                    self._prefill_inline(misses, report)
+                else:
+                    self._prefill_pool(misses, report)
+        # the classic backends reset report.computed before recording their
+        # own outcomes, so batch outcomes are folded in afterwards
+        self._record_outcomes(batch_states, report)
         report.quarantined = list(
             self.store.quarantines[q_before:])
         report.completed = report.cached + report.computed
@@ -776,6 +815,83 @@ class SimRunner:
                                      runner_stats=dict(self.stats))
 
     # -- dispatch backends -------------------------------------------------
+    def _batch_mode(self) -> str:
+        """'on' | 'auto' | 'off'.  Fault-injection plans force 'off': the
+        chaos harness targets the per-job classic paths (fault points,
+        retries, pool recycles), which the vectorized engine bypasses.
+
+        'auto' engages the batch engine only when jax has a non-CPU
+        backend: on a serial CPU host the lockstep engine is bound by
+        per-op dispatch overhead (~60 scatter ops per simulated tick) and
+        measurably *loses* to the event-heap engine, so silently batching
+        there would re-introduce exactly the kind of misleading perf
+        behavior this ledger is supposed to expose."""
+        if faults.active_plan() is not None:
+            return "off"
+        if self.batch is True:
+            return "on"
+        if self.batch is False:
+            return "off"
+        env = os.environ.get("REPRO_SIM_BATCH", "")
+        if env == "1":
+            return "on"
+        if env == "0":
+            return "off"
+        return "auto"
+
+    def _prefill_batch(self, misses: list[Job],
+                       min_jobs: int = 1) -> tuple[list[Job], list[_JobState]]:
+        """Run the batch-supported misses through the vectorized engine.
+
+        Returns (jobs left for the classic backends, completed job states).
+        Any whole-batch failure (jax unavailable, engine bug) degrades to
+        the classic path with every job intact — the batch engine is an
+        accelerator, never a new single point of failure."""
+        from repro.sim.batch import batch_supported, run_batch
+
+        supported = [j for j in misses if batch_supported(j[1])]
+        if len(supported) < min_jobs:
+            return misses, []
+        rest = [j for j in misses if not batch_supported(j[1])]
+        wd = self.sweep_config.watchdog_max_cycles
+        t0 = time.monotonic()
+        run_jobs = []
+        for name, cfg in supported:
+            run_cfg = cfg
+            if wd and not cfg.max_cycles:
+                run_cfg = replace(cfg, max_cycles=wd)
+            run_jobs.append((get_workload(name), run_cfg))
+        try:
+            outcomes = run_batch(run_jobs)
+        except Exception:  # noqa: BLE001 - degrade to the classic backends
+            return misses, []
+        per_job = max(time.monotonic() - t0, 0.0) / len(supported)
+        states: list[_JobState] = []
+        for job, out in zip(supported, outcomes):
+            st = _JobState(job=job, attempts=1, done=True)
+            if isinstance(out, SimBudgetExceeded):
+                name, cfg = job
+                # deterministic, like the classic budget outcome: no retry
+                st.failure = FailureRecord(
+                    job=job_label(job), workload=name, design=cfg.design,
+                    kind="budget", detail=f"SimBudgetExceeded: {out}",
+                    attempts=1, key=sim_key(name, cfg))
+            else:
+                self._memo[job] = out
+                self._disk_store(job, out)
+                self.stats["computed"] += 1
+                self.stats["batched"] += 1
+                self.metrics.histogram(
+                    "sweep_job_latency_s",
+                    "seconds from pool submit to completed simulation"
+                ).observe(per_job)
+                self.metrics.histogram(
+                    "sweep_queue_wait_s",
+                    "seconds jobs waited between ready and pool submit"
+                ).observe(0.0)
+            states.append(st)
+        return rest, states
+
     def _record_outcomes(self, states, report: SweepReport) -> None:
         for st in states:
             if st.retries:

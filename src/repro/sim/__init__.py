@@ -7,12 +7,17 @@ from .designs import (
     normalized_ipc, run,
 )
 from .gpu import GpuResult, simulate_gpu
+from .batch import (
+    BATCH_REV, batch_supported, run_batch, simulate_batch, simulate_one,
+)
 
 __all__ = [
     "SimBudgetExceeded",
     "SimConfig", "SimResult", "Simulator", "simulate", "DESIGNS",
     "SCHEDULERS", "BANK_MODELS", "RENUMBER_MODES", "INTERVAL_STRATEGIES",
     "GpuResult", "simulate_gpu",
+    "BATCH_REV", "batch_supported", "run_batch", "simulate_batch",
+    "simulate_one",
     "TABLE2", "baseline_config", "design_config", "max_tolerable_latency",
     "normalized_ipc", "run",
 ]

@@ -1,0 +1,1081 @@
+"""Vectorized batch simulation engine: many independent sims in lockstep.
+
+The scalar engines (`engine.py` event-heap, `golden.py` oracle) spend ~10us
+of Python per retired instruction — the bottleneck for every sweep the
+orchestrator runs.  This module restructures the *same* discrete-event tick
+into a masked, functional step over arrays indexed ``(lane, warp)``: one
+step advances a whole batch of independent simulations (per-SM shards,
+sweep job lists) together, and the entire run loop executes as a single
+jitted ``lax.while_loop`` — no Python in the hot path at all.
+
+Correctness contract (same discipline as the event-heap engine, PR 1):
+``golden.py`` stays frozen, and for every supported config the batch engine
+produces **bit-identical** `SimResult`s — every counter and the full
+`cycle_breakdown` — to the golden/event engines.  The differential fuzz
+harness (`tests/test_sim_fuzz.py`) extends to batch-vs-golden, and the
+Listing-1 pins go through the batch path too.
+
+Supported domain (`batch_supported`): the paper's two-level scheduler,
+``bank_model="none"``, untraced, single-SM configs — i.e. exactly the
+tracked fast-path sweep.  Any design, any interval strategy, any renumber
+mode (those are compile-side: the batch engine consumes the same
+`CompiledPlan` the event engine does).  Unsupported configs transparently
+fall back to the scalar event engine, job by job.
+
+Numeric discipline: every float the scalar engines touch is a Python f64,
+so the batch engine runs under ``jax.experimental.enable_x64`` and performs
+the *identical* operations in the *identical* order (token-bucket refills,
+``int()`` truncations, DRAM jitter hashes) — IEEE f64 arithmetic is then
+bit-equal between the scalar and vector paths by construction.
+
+Why lockstep is exact: the scalar tick's sequential sub-loops collapse.
+* The round-robin issue scan is rank arithmetic: the chosen warp is the
+  minimum ``(pos - cycle % n) mod n`` among ready active slots, and golden's
+  DONE-marking / mem-stall recording applies exactly to the ranks it
+  scanned (``rank <= chosen_rank``).
+* Deactivation order is irrelevant: the scalar loop's interleaved
+  ``deactivate -> activate`` calls never change which warps activate (the
+  READY pool only shrinks, admitted wids only increase), so one vectorized
+  deactivate + one greedy lowest-wid-first activation phase is equivalent.
+* The RFC's OrderedDict LRU is a (key, stamp) array pair: move-to-end and
+  insert are monotonic stamps, eviction is argmin-stamp — multiset-equal to
+  ``popitem(last=False)``.
+* The collector / prefetch-slot min-heaps are argmin-replace on arrays
+  (multiset equality with both the heap and golden's first-argmin scan).
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.pipeline import parse_interval_strategy
+from repro.core.plan_cache import compile_for_sim
+from repro.obs.attribution import CYCLE_CATEGORIES, check_breakdown, new_breakdown
+from repro.workloads.suite import Workload
+
+from .engine import (
+    ACTIVE, DONE, INACTIVE_READY, INACTIVE_WAIT, PREFETCH,
+    _CACHED_DESIGNS, _EDGE_PREFETCH,
+    SimBudgetExceeded, SimConfig, SimResult, simulate,
+)
+
+# Bump with ENGINE_REV-style discipline if batch-engine behavior ever
+# intentionally diverges (it must not: bit-identity is the contract).
+BATCH_REV = 1
+
+# Opcode kinds in the flat-PC instruction encoding.
+_OP_OTHER, _OP_BRA, _OP_EXIT, _OP_SET, _OP_LD = range(5)
+
+_BIG = np.int64(1) << 60          # sentinel "never" timestamp / rank
+_GUARD = 8_000_000                # same wedge guard as the scalar engines
+
+_CAT_INDEX = {c: i for i, c in enumerate(CYCLE_CATEGORIES)}
+
+
+def _jax():
+    """Import jax lazily so jax-free consumers never pay for it."""
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+    return jax, jnp, lax
+
+
+_CACHE_DIR_SET = False
+
+
+def _maybe_enable_compile_cache() -> None:
+    """Best-effort persistent XLA compile cache (huge win for CI reruns)."""
+    global _CACHE_DIR_SET
+    if _CACHE_DIR_SET:
+        return
+    _CACHE_DIR_SET = True
+    path = os.environ.get("REPRO_JAX_CACHE_DIR",
+                          os.path.expanduser("~/.cache/repro-jax"))
+    try:
+        import jax
+        os.makedirs(path, exist_ok=True)
+        jax.config.update("jax_compilation_cache_dir", path)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 1.0)
+    except Exception:
+        pass  # cache is an optimization, never a requirement
+
+
+def batch_supported(cfg: SimConfig) -> bool:
+    """Can this config run on the vectorized fast path?
+
+    The batch engine implements the paper's two-level scheduler with no
+    bank arbitration and no tracer — the golden-pinned domain, and exactly
+    what the tracked sweep runs.  Everything compile-side (design, interval
+    strategy, renumbering) is supported because the plan is shared.
+    """
+    return (cfg.scheduler == "two_level"
+            and cfg.bank_model == "none"
+            and not cfg.trace
+            and cfg.num_sms == 1)
+
+
+# --------------------------------------------------------------------------
+# Static per-lane encoding: flat-PC program tables + interval tables.
+# --------------------------------------------------------------------------
+
+@dataclass
+class _PlanCode:
+    """Flat-PC encoding of one compiled plan (+ workload trip counts).
+
+    All arrays are numpy; shared read-only across lanes and batches.
+    ``P`` rows of instruction metadata plus one sentinel row at index P
+    (the "past the end" position the clamped pc gather lands on).
+    """
+    n_pc: int                 # instruction count (flat program length)
+    op_kind: np.ndarray       # (P+1,) int32
+    srcs: np.ndarray          # (P+1, S) int32, sentinel = n_regs
+    psrcs: np.ndarray         # (P+1, PS) int32, sentinel = n_preds
+    dsts: np.ndarray          # (P+1, D) int32, sentinel = n_regs
+    pdst: np.ndarray          # (P+1,) int32, sentinel = n_preds
+    n_acc: np.ndarray         # (P+1,) int32
+    acc_regs: np.ndarray      # (P+1, G) int32 srcs+dsts in order, -1 pad
+    target: np.ndarray        # (P+1,) int32 flat target pc (bra)
+    trips: np.ndarray         # (P+1,) int32 loop trip count (0 if not loop)
+    loop_slot: np.ndarray     # (P+1,) int32, sentinel = n_loops
+    dia_slot: np.ndarray      # (P+1,) int32, sentinel = n_dias
+    interval_of_pc: np.ndarray  # (P+1,) int32, -1 = none
+    n_regs: int
+    n_preds: int
+    n_loops: int
+    n_dias: int
+    # interval tables, indexed by interval id (row IV = "no interval")
+    iv_rounds: np.ndarray     # (IV+1,) int32
+    iv_nfetch: np.ndarray     # (IV+1,) int32 effective fetch count
+    iv_nwb: np.ndarray        # (IV+1,) int32 writeback regs on deactivation
+    iv_has_op: np.ndarray     # (IV+1,) bool  prefetch actually fires
+    iv_regs: np.ndarray       # (IV+1, GV) int32 FULL bitvector, -1 pad
+    n_ivs: int
+
+
+_ENCODE_MEMO: dict = {}
+
+
+def _encode_plan(workload: Workload, cfg: SimConfig) -> _PlanCode:
+    plan = compile_for_sim(workload.program, cfg.design,
+                           cfg.interval_cap, cfg.num_banks,
+                           renumber=cfg.renumber,
+                           interval_strategy=cfg.interval_strategy,
+                           rfc_per_warp=cfg.rfc_entries_per_warp)
+    trips_key = tuple(sorted(workload.trips.items()))
+    key = (id(plan), cfg.design == "LTRF_plus", trips_key)
+    hit = _ENCODE_MEMO.get(key)
+    if hit is not None:
+        return hit[0]
+
+    prog = plan.prog
+    is_plus = cfg.design == "LTRF_plus"
+    flat: list[tuple[str, int, object]] = []     # (label, idx, ins)
+    block_first: dict[str, int] = {}             # label -> flat pc of first
+    for label in prog.order:
+        bb = prog.blocks[label]
+        block_first[label] = len(flat)           # even for empty blocks:
+        for i, ins in enumerate(bb.instrs):      # first instr at-or-after
+            flat.append((label, i, ins))
+    P = len(flat)
+
+    def target_pc(label: str) -> int:
+        # flat pc of the first instruction in-or-after `label` (the scalar
+        # engines' lazy block walk); past-the-end collapses to P.
+        start = block_first.get(label)
+        return P if start is None else start
+
+    n_regs = 0
+    n_preds = 0
+    max_s = 1
+    max_ps = 1
+    max_d = 1
+    for _, _, ins in flat:
+        for r in tuple(ins.srcs) + tuple(ins.dsts):
+            n_regs = max(n_regs, r + 1)
+        for p in ins.psrcs:
+            n_preds = max(n_preds, p + 1)
+        if ins.pdst is not None:
+            n_preds = max(n_preds, ins.pdst + 1)
+        max_s = max(max_s, len(ins.srcs))
+        max_ps = max(max_ps, len(ins.psrcs))
+        max_d = max(max_d, len(ins.dsts))
+    for op in plan.pf_ops.values():
+        for r in op.bitvector:
+            n_regs = max(n_regs, r + 1)
+
+    # loop slots: one counter per trip-count label (shared across branch
+    # sites, like the scalar `loop_counters[target]`); diamond slots: one
+    # visit counter per conditional non-loop branch *site* (flat pc).
+    loop_labels: dict[str, int] = {}
+    n_dias = 0
+
+    max_g = max(1, max_s + max_d)
+    op_kind = np.zeros(P + 1, np.int32)
+    srcs = np.full((P + 1, max_s), n_regs, np.int32)
+    psrcs = np.full((P + 1, max_ps), n_preds, np.int32)
+    dsts = np.full((P + 1, max_d), n_regs, np.int32)
+    pdst = np.full(P + 1, n_preds, np.int32)
+    n_acc = np.zeros(P + 1, np.int32)
+    acc_regs = np.full((P + 1, max_g), -1, np.int32)
+    target = np.zeros(P + 1, np.int32)
+    trips = np.zeros(P + 1, np.int32)
+    interval_of_pc = np.full(P + 1, -1, np.int32)
+
+    loop_slot_rows = np.zeros(P + 1, np.int32)
+    dia_slot_rows = np.zeros(P + 1, np.int32)
+    kinds = {"bra": _OP_BRA, "exit": _OP_EXIT, "set": _OP_SET, "ld": _OP_LD}
+
+    for pc, (label, idx, ins) in enumerate(flat):
+        interval_of_pc[pc] = plan.block_interval.get(label, -1)
+        op_kind[pc] = kinds.get(ins.op, _OP_OTHER)
+        for j, r in enumerate(ins.srcs):
+            srcs[pc, j] = r
+        for j, p in enumerate(ins.psrcs):
+            psrcs[pc, j] = p
+        for j, r in enumerate(ins.dsts):
+            dsts[pc, j] = r
+        if ins.pdst is not None:
+            pdst[pc] = ins.pdst
+        regs = tuple(ins.srcs) + tuple(ins.dsts)
+        n_acc[pc] = len(regs)
+        for j, r in enumerate(regs):
+            acc_regs[pc, j] = r
+        if ins.op == "bra":
+            target[pc] = target_pc(ins.target)
+            t = workload.trips.get(ins.target)
+            if ins.psrcs and t is not None:
+                trips[pc] = t
+                slot = loop_labels.setdefault(ins.target, len(loop_labels))
+                loop_slot_rows[pc] = slot + 1  # 0 = "not a loop" below
+            elif ins.psrcs:
+                n_dias += 1
+                dia_slot_rows[pc] = n_dias     # 0 = "not a diamond"
+    # the lazy block walk parks a finished warp on the LAST block in order,
+    # so the sentinel row's interval is that block's (activation prefetch
+    # of an at-end warp — unreachable in practice, encoded for fidelity).
+    interval_of_pc[P] = plan.block_interval.get(prog.order[-1], -1) \
+        if prog.order else -1
+    op_kind[P] = _OP_EXIT
+
+    n_loops = len(loop_labels)
+    loop_slot = np.where(loop_slot_rows > 0, loop_slot_rows - 1,
+                         n_loops).astype(np.int32)
+    dia_slot = np.where(dia_slot_rows > 0, dia_slot_rows - 1,
+                        n_dias).astype(np.int32)
+
+    # ------------------------------------------------------ interval tables
+    n_ivs = 0
+    for iid in plan.pf_ops:
+        n_ivs = max(n_ivs, iid + 1)
+    for iid in plan.block_interval.values():
+        n_ivs = max(n_ivs, iid + 1)
+    max_gv = 1
+    for op in plan.pf_ops.values():
+        max_gv = max(max_gv, len(op.bitvector))
+    iv_rounds = np.zeros(n_ivs + 1, np.int32)
+    iv_nfetch = np.zeros(n_ivs + 1, np.int32)
+    iv_nwb = np.zeros(n_ivs + 1, np.int32)
+    iv_has_op = np.zeros(n_ivs + 1, bool)
+    iv_regs = np.full((n_ivs + 1, max_gv), -1, np.int32)
+    for iid, op in plan.pf_ops.items():
+        fetch = op.bitvector
+        rounds = op.serial_rounds
+        has = bool(fetch)
+        if is_plus:
+            ent = plan.plus_fetch.get(iid)
+            if ent is not None:
+                live, live_rounds = ent
+                if fetch:                       # engine consults plus_fetch
+                    fetch, rounds = live, live_rounds   # only past this guard
+                    has = bool(live)
+            nwb = len(plan.live_sets.get(iid, op.bitvector))
+        else:
+            nwb = len(op.bitvector)
+        iv_rounds[iid] = rounds
+        iv_nfetch[iid] = len(fetch)
+        iv_nwb[iid] = nwb
+        iv_has_op[iid] = has
+        # reg_ready refresh uses the FULL bitvector even for LTRF+ (cache
+        # slots are reserved for dead entries; only the data movement is
+        # trimmed) — order irrelevant (independent per-register max).
+        for j, r in enumerate(sorted(op.bitvector)):
+            iv_regs[iid, j] = r
+
+    code = _PlanCode(
+        n_pc=P, op_kind=op_kind, srcs=srcs, psrcs=psrcs, dsts=dsts,
+        pdst=pdst, n_acc=n_acc, acc_regs=acc_regs, target=target,
+        trips=trips, loop_slot=loop_slot, dia_slot=dia_slot,
+        interval_of_pc=interval_of_pc, n_regs=n_regs, n_preds=n_preds,
+        n_loops=n_loops, n_dias=n_dias,
+        iv_rounds=iv_rounds, iv_nfetch=iv_nfetch, iv_nwb=iv_nwb,
+        iv_has_op=iv_has_op, iv_regs=iv_regs, n_ivs=n_ivs,
+    )
+    _ENCODE_MEMO[key] = (code, plan)  # keep `plan` alive: memo key uses id()
+    return code
+
+
+# --------------------------------------------------------------------------
+# Batch assembly: pad lanes into shared (lane, ...) arrays.
+# --------------------------------------------------------------------------
+
+@dataclass
+class _Lane:
+    workload: Workload
+    cfg: SimConfig
+    code: _PlanCode
+    occupancy: int
+
+
+def _occupancy(workload: Workload, cfg: SimConfig) -> int:
+    cap_kb = cfg.rf_size_kb + (cfg.rfc_size_kb if cfg.add_rfc_to_main else 0)
+    per_warp = max(workload.regs_per_thread, 1)
+    return max(1, min(cfg.num_warps, cap_kb * 1024 // 128 // per_warp))
+
+
+def _acap(ln: "_Lane") -> int:
+    """Active-slot cap for one lane (mirrors the scalar engines')."""
+    if ln.cfg.design in _CACHED_DESIGNS:
+        return min(ln.cfg.active_slots, ln.occupancy)
+    return ln.occupancy
+
+
+def _bucket(n: int, floor: int) -> int:
+    """Next power-of-two >= n (>= floor): shape buckets bound recompiles."""
+    b = floor
+    while b < n:
+        b *= 2
+    return b
+
+
+def _build(lanes: Sequence[_Lane]):
+    """Pad every lane's tables/config into batch arrays (numpy, 64-bit)."""
+    i32, i64, f64 = np.int32, np.int64, np.float64
+    K = _bucket(len(lanes), 2)
+    W = _bucket(max(ln.cfg.num_warps for ln in lanes), 4)
+    # Active-list width: cached designs cap it at `active_slots` (8), the
+    # uncached ones scan every resident warp.  Keeping this dimension tight
+    # is the difference between (K, 8) and (K, 64) work in the per-slot
+    # scheduler scans — `run_batch` groups lanes by it.
+    A = _bucket(max(_acap(ln) for ln in lanes), 2)
+    P = _bucket(max(ln.code.n_pc for ln in lanes), 16)
+    S = max(ln.code.srcs.shape[1] for ln in lanes)
+    PS = max(ln.code.psrcs.shape[1] for ln in lanes)
+    DD = max(ln.code.dsts.shape[1] for ln in lanes)
+    G = max(ln.code.acc_regs.shape[1] for ln in lanes)
+    GV = _bucket(max(ln.code.iv_regs.shape[1] for ln in lanes), 4)
+    R = _bucket(max(ln.code.n_regs for ln in lanes), 8)
+    PR = _bucket(max(ln.code.n_preds for ln in lanes), 2)
+    L = _bucket(max(ln.code.n_loops for ln in lanes), 2)
+    DM = _bucket(max(ln.code.n_dias for ln in lanes), 2)
+    IV = _bucket(max(ln.code.n_ivs for ln in lanes), 4)
+    C = max(ln.cfg.num_collectors for ln in lanes)
+    PF = max(ln.cfg.max_inflight_prefetch for ln in lanes)
+    # E == 1 statically means "no RFC lane in this chunk": the jitted run
+    # skips the whole cache-classification + LRU block (RFC chunks are
+    # padded to >= 2 entries so the gate never misfires).
+    _rfc_es = [ln.cfg.rfc_entries for ln in lanes if ln.cfg.design == "RFC"]
+    E = max(2, *_rfc_es) if _rfc_es else 1
+    IW = max(ln.cfg.issue_width for ln in lanes)
+
+    co = {
+        # per-pc instruction metadata (sentinel row at pc=P)
+        "kind": np.full((K, P + 1), _OP_EXIT, i32),
+        "srcs": np.full((K, P + 1, S), R, i32),
+        "psrcs": np.full((K, P + 1, PS), PR, i32),
+        "dsts": np.full((K, P + 1, DD), R, i32),
+        "pdst": np.full((K, P + 1), PR, i32),
+        "nacc": np.zeros((K, P + 1), i32),
+        "acc": np.full((K, P + 1, G), -1, i32),
+        "target": np.zeros((K, P + 1), i32),
+        "trips": np.zeros((K, P + 1), i32),
+        "lslot": np.full((K, P + 1), L, i32),
+        "dslot": np.full((K, P + 1), DM, i32),
+        "ivpc": np.full((K, P + 1), -1, i32),
+        # per-interval tables (sentinel row at iid=IV)
+        "ivr": np.zeros((K, IV + 1), i32),
+        "ivn": np.zeros((K, IV + 1), i32),
+        "ivw": np.zeros((K, IV + 1), i32),
+        "ivh": np.zeros((K, IV + 1), bool),
+        "ivregs": np.full((K, IV + 1, GV), -1, i32),
+        # per-lane scalars
+        "endpc": np.zeros(K, i32),
+        "mrfc": np.zeros(K, f64), "rfcc": np.zeros(K, f64),
+        "brf_f": np.zeros(K, f64), "wlat": np.zeros(K, f64),
+        "rate": np.zeros(K, f64), "l1h": np.zeros(K, f64),
+        "xbar": np.ones(K, f64), "banksf": np.zeros(K, f64),
+        "aluf": np.zeros(K, f64), "memf": np.zeros(K, f64),
+        "brf_i": np.zeros(K, i64), "l1c": np.zeros(K, i64),
+        # dram_interval is a float on gpu.per_sm_configs shards (the per-SM
+        # effective interval is dram_interval*num_sms/partitions) — golden
+        # does the same arithmetic in Python floats, exactly representable
+        "thr": np.zeros(K, i64), "drint": np.zeros(K, f64),
+        "seed": np.zeros(K, i64), "maxc": np.zeros(K, i64),
+        "iw": np.zeros(K, i32), "nw": np.zeros(K, i32),
+        "rcap": np.zeros(K, i32), "acap": np.zeros(K, i32),
+        "tcap": np.zeros(K, i32), "ecap": np.ones(K, i32),
+        "cached": np.zeros(K, bool), "edge": np.zeros(K, bool),
+        "bl": np.zeros(K, bool), "rfc": np.zeros(K, bool),
+        "ideal": np.zeros(K, bool), "fam": np.zeros(K, bool),
+        # dummy whose SHAPE carries the static issue-slot unroll count
+        "slots": np.zeros(IW, np.int8),
+    }
+
+    def remap(a, sent_old, sent_new):
+        return np.where(a == sent_old, sent_new, a).astype(np.int32)
+
+    for k, ln in enumerate(lanes):
+        c, cfg = ln.code, ln.cfg
+        n = c.n_pc
+        co["kind"][k, : n + 1] = c.op_kind
+        co["srcs"][k, : n + 1, : c.srcs.shape[1]] = remap(c.srcs, c.n_regs, R)
+        co["psrcs"][k, : n + 1, : c.psrcs.shape[1]] = \
+            remap(c.psrcs, c.n_preds, PR)
+        co["dsts"][k, : n + 1, : c.dsts.shape[1]] = remap(c.dsts, c.n_regs, R)
+        co["pdst"][k, : n + 1] = remap(c.pdst, c.n_preds, PR)
+        co["nacc"][k, : n + 1] = c.n_acc
+        co["acc"][k, : n + 1, : c.acc_regs.shape[1]] = c.acc_regs
+        co["target"][k, : n + 1] = c.target
+        co["trips"][k, : n + 1] = c.trips
+        co["lslot"][k, : n + 1] = remap(c.loop_slot, c.n_loops, L)
+        co["dslot"][k, : n + 1] = remap(c.dia_slot, c.n_dias, DM)
+        co["ivpc"][k, : n + 1] = c.interval_of_pc
+        nv = c.n_ivs
+        co["ivr"][k, : nv + 1] = c.iv_rounds
+        co["ivn"][k, : nv + 1] = c.iv_nfetch
+        co["ivw"][k, : nv + 1] = c.iv_nwb
+        co["ivh"][k, : nv + 1] = c.iv_has_op
+        co["ivregs"][k, : nv + 1, : c.iv_regs.shape[1]] = c.iv_regs
+        # sentinel rows must stay inert even where lane rows ended early
+        co["ivh"][k, nv] = False
+        co["ivpc"][k, n] = c.interval_of_pc[n]
+
+        co["endpc"][k] = n
+        design = cfg.design
+        cached = design in _CACHED_DESIGNS
+        rcap = ln.occupancy
+        co["mrfc"][k] = cfg.mrf_cycles
+        co["rfcc"][k] = float(cfg.rfc_cycles)
+        co["brf_f"][k] = float(cfg.base_rf_cycles)
+        co["wlat"][k] = (float(cfg.base_rf_cycles) if design == "Ideal"
+                         else cfg.mrf_cycles if design == "BL"
+                         else float(cfg.rfc_cycles))
+        co["rate"][k] = cfg.num_banks / max(cfg.mrf_cycles / 6.0, 1.0)
+        co["l1h"][k] = ln.workload.l1_hit
+        co["xbar"][k] = float(cfg.xbar_regs_per_cycle)
+        co["banksf"][k] = float(cfg.num_banks)
+        co["aluf"][k] = float(cfg.alu_cycles)
+        co["memf"][k] = float(cfg.mem_cycles)
+        co["brf_i"][k] = cfg.base_rf_cycles
+        co["l1c"][k] = cfg.l1_cycles
+        co["thr"][k] = 2 * cfg.l1_cycles
+        co["drint"][k] = cfg.dram_interval
+        co["seed"][k] = cfg.seed
+        co["maxc"][k] = cfg.max_cycles
+        co["iw"][k] = cfg.issue_width
+        co["nw"][k] = cfg.num_warps
+        co["rcap"][k] = rcap
+        co["acap"][k] = min(cfg.active_slots, rcap) if cached else rcap
+        co["tcap"][k] = min(cfg.active_slots, rcap)
+        co["ecap"][k] = max(1, min(cfg.rfc_entries, E))
+        co["cached"][k] = cached
+        co["edge"][k] = design in _EDGE_PREFETCH
+        co["bl"][k] = design == "BL"
+        co["rfc"][k] = design == "RFC"
+        co["ideal"][k] = design == "Ideal"
+        co["fam"][k] = cached
+
+    st = {
+        "cycle": np.zeros(K, i64),
+        "guard": np.zeros((), i64),
+        "alive": np.zeros(K, bool),
+        "budget": np.zeros(K, bool),
+        "status": np.full((K, W), INACTIVE_READY, i32),
+        "pc": np.zeros((K, W), i32),
+        "ra": np.zeros((K, W), i64),
+        "iv": np.full((K, W), -1, i32),
+        "issued": np.zeros((K, W), i64),
+        "mops": np.zeros((K, W), i64),
+        "rr": np.zeros((K, W, R + 1), f64),
+        "rm": np.zeros((K, W, R + 1), bool),
+        "pr": np.zeros((K, W, PR + 1), f64),
+        "lc": np.zeros((K, W, L + 1), i32),
+        "dc": np.zeros((K, W, DM + 1), i32),
+        "act": np.zeros((K, A), i32),
+        "na": np.zeros(K, i32),
+        "res": np.zeros((K, W), bool),
+        "nr": np.zeros(K, i32),
+        "ptr": np.zeros(K, i32),
+        "pf": np.full((K, PF), _BIG, i64),
+        "col": np.full((K, C), _BIG, i64),
+        "tok": np.zeros(K, f64),
+        "mlast": np.zeros(K, i64),
+        "dnext": np.zeros(K, f64),
+        "rkey": np.full((K, E), -1, i32),
+        "rtime": np.full((K, E), _BIG, i64),
+        "rcnt": np.zeros(K, i32),
+        "rstamp": np.zeros(K, i64),
+        "bd": np.zeros((K, len(CYCLE_CATEGORIES)), i64),
+        "ch": np.zeros(K, i64), "ca": np.zeros(K, i64),
+        "cm": np.zeros(K, i64), "cpo": np.zeros(K, i64),
+        "cpc": np.zeros(K, i64), "cps": np.zeros(K, i64),
+        "cwb": np.zeros(K, i64), "cact": np.zeros(K, i64),
+    }
+    for k, ln in enumerate(lanes):
+        cfg = ln.cfg
+        st["alive"][k] = True
+        # initial admit(): the first resident_cap warps, in wid order
+        st["res"][k, : ln.occupancy] = True
+        st["nr"][k] = ln.occupancy
+        st["ptr"][k] = ln.occupancy
+        st["pf"][k, : cfg.max_inflight_prefetch] = 0
+        st["col"][k, : cfg.num_collectors] = 0
+        st["tok"][k] = float(cfg.num_banks)
+    return co, st
+
+
+# --------------------------------------------------------------------------
+# The jitted lockstep run: one lax.while_loop over the whole batch.
+# --------------------------------------------------------------------------
+
+def _run_jax(co, st):
+    """Advance every lane to completion.  Traced+jitted once per shape."""
+    _, jnp, lax = _jax()
+    i64, f64 = jnp.int64, jnp.float64
+    K, W = st["status"].shape
+    A = st["act"].shape[1]
+    E = st["rkey"].shape[1]       # 1 <=> no RFC lane in this chunk (static)
+    P = co["kind"].shape[1] - 1
+    R = st["rr"].shape[2] - 1
+    PRS = st["pr"].shape[2] - 1
+    LS = st["lc"].shape[2] - 1
+    DS = st["dc"].shape[2] - 1
+    IVS = co["ivr"].shape[1] - 1
+    IW = co["slots"].shape[0]
+    NCAT = len(CYCLE_CATEGORIES)
+    READY, WAIT = INACTIVE_READY, INACTIVE_WAIT
+    kk = jnp.arange(K)
+    wI = jnp.arange(W)
+    aI = jnp.arange(A)
+    BIG = jnp.asarray(_BIG, i64)
+
+    def set_w(arr, wid, mask, val):
+        """arr[k, wid[k]] = val where mask (per-lane single-warp scatter)."""
+        old = arr[kk, wid]
+        return arr.at[kk, wid].set(jnp.where(mask, val, old))
+
+    def rnd(s, x):
+        """Round a float product before its consuming add.  XLA CPU
+        contracts a*b+c into one fma (single rounding), but the scalar
+        engines round the product first — a one-ulp difference that is
+        enough to flip a token-bucket comparison.  The select on a
+        loop-carried value cannot be folded away, so the intermediate is
+        materialized and rounded exactly like the Python arithmetic."""
+        return jnp.where(s["guard"] >= 0, x, 0.0)
+
+    def prefetch(s, mask, wid, force):
+        """_start_prefetch for one selected warp per lane, masked."""
+        pcc = jnp.minimum(s["pc"][kk, wid], P)
+        iid = co["ivpc"][kk, pcc]
+        go = mask & (iid >= 0)
+        if not force:
+            go = go & (iid != s["iv"][kk, wid])
+        s["iv"] = set_w(s["iv"], wid, go, iid)
+        ii = jnp.where(go, iid, IVS)
+        body = go & co["ivh"][kk, ii]
+        nf = co["ivn"][kk, ii].astype(i64)
+        lat = rnd(s, co["ivr"][kk, ii].astype(f64) * co["mrfc"]) \
+            + nf.astype(f64) / co["xbar"]
+        slot = jnp.argmin(s["pf"], axis=1)
+        freet = s["pf"][kk, slot]
+        startt = jnp.maximum(s["cycle"], freet)
+        done = (startt.astype(f64) + lat).astype(i64)   # int(start + lat)
+        s["pf"] = s["pf"].at[kk, slot].set(jnp.where(body, done, freet))
+        s["status"] = set_w(s["status"], wid, body, PREFETCH)
+        s["ra"] = set_w(s["ra"], wid, body, done)
+        s["cpo"] += body.astype(i64)
+        s["cpc"] += jnp.where(body, lat.astype(i64), 0)
+        s["cps"] += jnp.where(body, done - s["cycle"], 0)
+        s["cm"] += jnp.where(body, nf, 0)
+        regs = co["ivregs"][kk, ii]                     # (K, GV)
+        vp = (regs >= 0) & body[:, None]
+        ridx = jnp.where(vp, regs, R)                   # dummy col stays 0
+        val = jnp.where(vp, done[:, None].astype(f64), 0.0)
+        s["rr"] = s["rr"].at[kk[:, None], wid[:, None], ridx].max(val)
+        return s
+
+    def activation(s, act):
+        """Greedy lowest-wid-ready activation until slots/candidates run out
+        (the scalar engines' interleaved activate() calls collapse to this:
+        admitted wids only increase and the READY pool never grows mid-loop,
+        so batched ascending-wid activation charges identical prefetches)."""
+        def more(s):
+            cand = s["res"] & (s["status"] == READY)
+            return jnp.any(act & (s["na"] < co["acap"])
+                           & jnp.any(cand, axis=1))
+
+        def one(s):
+            cand = s["res"] & (s["status"] == READY)
+            do = act & (s["na"] < co["acap"]) & jnp.any(cand, axis=1)
+            wid = jnp.argmax(cand, axis=1).astype(s["act"].dtype)
+            s = prefetch(s, do & co["cached"], wid, True)
+            s["cact"] += do.astype(i64)
+            pos = jnp.minimum(s["na"], A - 1)
+            oldv = s["act"][kk, pos]
+            s["act"] = s["act"].at[kk, pos].set(jnp.where(do, wid, oldv))
+            s["na"] = s["na"] + do.astype(s["na"].dtype)
+            stw = s["status"][kk, wid]
+            s["status"] = set_w(s["status"], wid, do,
+                                jnp.where(stw == PREFETCH, stw, ACTIVE))
+            return s
+
+        return lax.while_loop(more, one, s)
+
+    def scan(s):
+        """Per-active-slot readiness (recomputed per issue slot, like the
+        golden scheduler's fresh scans)."""
+        posv = aI[None, :] < s["na"][:, None]
+        wida = jnp.where(posv, s["act"], 0)
+        stat = s["status"][kk[:, None], wida]
+        isact = posv & (stat == ACTIVE)
+        pca = s["pc"][kk[:, None], wida]
+        atend = pca >= co["endpc"][:, None]
+        pcc = jnp.minimum(pca, P)
+        sidx = co["srcs"][kk[:, None], pcc]             # (K, W, S)
+        ts = s["rr"][kk[:, None, None], wida[:, :, None], sidx]
+        fm = s["rm"][kk[:, None, None], wida[:, :, None], sidx]
+        pidx = co["psrcs"][kk[:, None], pcc]            # (K, W, PS)
+        tp = s["pr"][kk[:, None, None], wida[:, :, None], pidx]
+        cyc = s["cycle"].astype(f64)[:, None]
+        ready = isact & ~atend \
+            & (jnp.maximum(ts.max(axis=2), tp.max(axis=2)) <= cyc)
+        # long-latency mem block: t > cycle + 2*l1_cycles on a mem-produced src
+        thr = (s["cycle"] + co["thr"]).astype(f64)[:, None, None]
+        blocked = jnp.where(fm & (ts > thr), ts, 0.0).max(axis=2)
+        pend_s = ts > cyc[:, :, None]
+        return {"posv": posv, "wida": wida, "stat": stat, "isact": isact,
+                "atend": atend, "ts": ts, "tp": tp, "ready": ready,
+                "blocked": blocked,
+                "pend": pend_s.any(axis=2) | (tp > cyc[:, :, None]).any(axis=2),
+                "pmem": (pend_s & fm).any(axis=2)}
+
+    def issue_one(s, picked, wsel):
+        """The _issue body for one selected warp per lane, masked.
+        Returns (state, instruction-issued, structural-stall)."""
+        pcs = s["pc"][kk, wsel]
+        pcc = jnp.minimum(pcs, P)
+        kind = co["kind"][kk, pcc]
+        bra = picked & (kind == _OP_BRA)
+        ext = picked & (kind == _OP_EXIT)
+        opnd = picked & (kind != _OP_BRA) & (kind != _OP_EXIT)
+        nacc = co["nacc"][kk, pcc].astype(i64)
+        # RFC classification against the PRE-issue cache state (statically
+        # skipped in chunks with no RFC lane: co["rfc"] is all-False there,
+        # so every consumer of n_miss/n_hit reduces to the zero branch)
+        regs = co["acc"][kk, pcc]                       # (K, G)
+        if E > 1:
+            onr = (regs >= 0) & opnd[:, None] & co["rfc"][:, None]
+            keyv = jnp.where(onr, wsel[:, None] * (R + 1) + regs, -2)
+            memb = (s["rkey"][:, None, :] == keyv[:, :, None]).any(axis=2)
+            n_miss = (onr & ~memb).sum(axis=1).astype(i64)
+            n_hit = memb.sum(axis=1).astype(i64)
+        else:
+            n_miss = jnp.zeros((K,), i64)
+            n_hit = jnp.zeros((K,), i64)
+        # MRF bandwidth token bucket (refill only on a non-zero request)
+        n_bw = jnp.where(co["bl"], jnp.where(opnd, nacc, 0),
+                         jnp.where(co["rfc"], n_miss, 0))
+        do_bw = opnd & (n_bw > 0)
+        refill = do_bw & (s["cycle"] > s["mlast"])
+        newtok = jnp.minimum(
+            co["banksf"],
+            s["tok"] + rnd(s, co["rate"]
+                           * (s["cycle"] - s["mlast"]).astype(f64)))
+        tok = jnp.where(refill, newtok, s["tok"])
+        s["mlast"] = jnp.where(refill, s["cycle"], s["mlast"])
+        bw_ok = ~do_bw | (tok >= n_bw.astype(f64))
+        # tokens are consumed before the collector attempt (and leak if the
+        # collector then fails — the scalar engines' exact semantics)
+        s["tok"] = jnp.where(do_bw & bw_ok, tok - n_bw.astype(f64), tok)
+        cslot = jnp.argmin(s["col"], axis=1)
+        cfree = s["col"][kk, cslot]
+        ok = opnd & bw_ok & (cfree <= s["cycle"])
+        s["col"] = s["col"].at[kk, cslot].set(
+            jnp.where(ok, s["cycle"] + co["brf_i"], cfree))
+        sfail = opnd & ~ok
+        read_lat = jnp.where(
+            co["ideal"], co["brf_f"],
+            jnp.where(co["bl"], co["mrfc"],
+                      jnp.where(co["rfc"],
+                                jnp.where(n_miss > 0, co["mrfc"], co["rfcc"]),
+                                co["rfcc"])))
+        s["cm"] += jnp.where(ok, jnp.where(co["bl"], nacc,
+                                           jnp.where(co["rfc"], n_miss, 0)), 0)
+        s["ca"] += jnp.where(ok & (co["rfc"] | co["fam"]), nacc, 0)
+        s["ch"] += jnp.where(ok, jnp.where(co["rfc"], n_hit,
+                                           jnp.where(co["fam"], nacc, 0)), 0)
+        # RFC LRU mutation: move-to-end every pre-state hit in operand order,
+        # then insert misses with oldest-stamp eviction (OrderedDict-equal).
+        lru = ok & co["rfc"] if E > 1 else jnp.zeros((K,), bool)
+        for i in range(regs.shape[1] if E > 1 else 0):
+            ki = keyv[:, i]
+            hv = lru & memb[:, i]
+            pos = jnp.argmax(s["rkey"] == ki[:, None], axis=1)
+            told = s["rtime"][kk, pos]
+            s["rtime"] = s["rtime"].at[kk, pos].set(
+                jnp.where(hv, s["rstamp"], told))
+            s["rstamp"] += hv.astype(i64)
+        for i in range(regs.shape[1] if E > 1 else 0):
+            ki = keyv[:, i]
+            membL = (s["rkey"] == ki[:, None]).any(axis=1)  # LIVE state
+            ins = lru & (ki >= 0) & ~membL
+            full = s["rcnt"] >= co["ecap"]
+            slot = jnp.where(full,
+                             jnp.argmin(s["rtime"], axis=1)
+                             .astype(s["rcnt"].dtype),
+                             s["rcnt"])
+            slot = jnp.minimum(slot, s["rkey"].shape[1] - 1)
+            kold = s["rkey"][kk, slot]
+            toldi = s["rtime"][kk, slot]
+            s["rkey"] = s["rkey"].at[kk, slot].set(jnp.where(ins, ki, kold))
+            s["rtime"] = s["rtime"].at[kk, slot].set(
+                jnp.where(ins, s["rstamp"], toldi))
+            s["rstamp"] += ins.astype(i64)
+            s["rcnt"] += (ins & ~full).astype(s["rcnt"].dtype)
+        # memory latency: deterministic jitter hash + single-server DRAM queue
+        is_ld = kind == _OP_LD
+        ldo = ok & is_ld
+        mops = s["mops"][kk, wsel]
+        h = (wsel.astype(i64) * 2654435761 + mops * 40503
+             + co["seed"] * 97) & 0xFFFF
+        s["mops"] = s["mops"].at[kk, wsel].add(jnp.where(ldo, 1, 0))
+        hit = (h.astype(f64) / 65535.0) < co["l1h"]
+        spread = rnd(s, ((h >> 3).astype(f64) / 8191.0 - 0.5) * 0.6)
+        dstart = jnp.maximum(s["cycle"].astype(f64), s["dnext"])
+        s["dnext"] = jnp.where(ldo & ~hit, dstart + co["drint"], s["dnext"])
+        mlat = jnp.where(hit, co["l1c"],
+                         (dstart - s["cycle"].astype(f64)
+                          + rnd(s, co["memf"] * (1.0 + spread))).astype(i64))
+        # writeback chain: done_at accumulates exactly like the scalar code
+        base = s["cycle"].astype(f64) + read_lat
+        is_set = kind == _OP_SET
+        da = jnp.where(is_set, base + co["aluf"],
+                       jnp.where(is_ld, base + (mlat.astype(f64) + co["wlat"]),
+                                 base + (co["aluf"] + co["wlat"])))
+        pd = co["pdst"][kk, pcc]
+        onp = ok & is_set & (pd < PRS)
+        pidx = jnp.where(onp, pd, PRS)
+        oldp = s["pr"][kk, wsel, pidx]
+        s["pr"] = s["pr"].at[kk, wsel, pidx].set(jnp.where(onp, da, oldp))
+        dsts = co["dsts"][kk, pcc]                      # (K, DD)
+        ond = (ok & ~is_set)[:, None] & (dsts < R)
+        didx = jnp.where(ond, dsts, R)                  # dummy col stays 0
+        s["rr"] = s["rr"].at[kk[:, None], wsel[:, None], didx].set(
+            jnp.where(ond, da[:, None], 0.0))
+        s["rm"] = s["rm"].at[kk[:, None], wsel[:, None], didx].set(
+            ond & is_ld[:, None])
+        happened = bra | ext | ok
+        s["issued"] = s["issued"].at[kk, wsel].add(jnp.where(happened, 1, 0))
+        s["status"] = set_w(s["status"], wsel, ext, DONE)
+        # branch resolution (loop trip counters / diamond visit hashes)
+        tgt = co["target"][kk, pcc]
+        trips = co["trips"][kk, pcc]
+        lsl = co["lslot"][kk, pcc]
+        dsl = co["dslot"][kk, pcc]
+        uncond = co["psrcs"][kk, pcc, 0] >= PRS
+        isl = bra & (lsl < LS)
+        lidx = jnp.where(isl, lsl, LS)
+        oldl = s["lc"][kk, wsel, lidx]
+        c = oldl + 1
+        tkl = c < trips
+        s["lc"] = s["lc"].at[kk, wsel, lidx].set(
+            jnp.where(isl, jnp.where(tkl, c, 0), oldl))
+        isd = bra & ~uncond & (lsl >= LS)
+        didx2 = jnp.where(isd, dsl, DS)
+        v = s["dc"][kk, wsel, didx2]
+        s["dc"] = s["dc"].at[kk, wsel, didx2].set(jnp.where(isd, v + 1, v))
+        hh = (wsel.astype(i64) * 31 + v.astype(i64) * 17 + co["seed"]) & 0xFF
+        taken = jnp.where(uncond, True,
+                          jnp.where(isl, tkl, (hh & 1) == 1))
+        npc = jnp.where(bra, jnp.where(taken, tgt, pcs + 1),
+                        jnp.where(ok, pcs + 1, pcs))
+        s["pc"] = set_w(s["pc"], wsel, picked & ~ext, npc)
+        # edge prefetch: issued warp crossed into a new interval's block
+        ep = co["edge"] & (bra | ok) & (npc < co["endpc"])
+        s = prefetch(s, ep, wsel, False)
+        return s, happened, sfail
+
+    def tick(s):
+        s["guard"] = s["guard"] + 1
+        # cycle-budget watchdog: freeze the lane at the identical cycle the
+        # scalar engines raise SimBudgetExceeded
+        exceed = s["alive"] & (co["maxc"] > 0) & (s["cycle"] > co["maxc"])
+        s["budget"] = s["budget"] | exceed
+        s["alive"] = s["alive"] & ~exceed
+        act = s["alive"]
+        # wake: WAIT->READY, PREFETCH->ACTIVE once ready_at arrives
+        wake = s["res"] & act[:, None] & (s["ra"] <= s["cycle"][:, None])
+        st0 = s["status"]
+        s["status"] = jnp.where(wake & (st0 == WAIT), READY,
+                                jnp.where(wake & (st0 == PREFETCH),
+                                          ACTIVE, st0))
+        s = activation(s, act)
+        # issue slots (round-robin rank arithmetic == the golden scan)
+        issue_any = jnp.zeros((K,), bool)
+        struct = jnp.zeros((K,), bool)
+        stall_until = jnp.zeros((K, W), f64)
+        for j in range(IW):
+            slot_on = act & (j < co["iw"])
+            sc = scan(s)
+            nz = jnp.maximum(s["na"], 1).astype(i64)
+            rank = jnp.where(sc["posv"],
+                             (aI[None, :] - (s["cycle"] % nz)[:, None])
+                             % nz[:, None], BIG)
+            rrk = jnp.where(sc["ready"] & slot_on[:, None], rank, BIG)
+            crank = rrk.min(axis=1)
+            picked = (crank < BIG) & slot_on
+            visited = sc["posv"] & slot_on[:, None] & (rank <= crank[:, None])
+            # scanned warps at program end retire (status: DONE is max)
+            nd = visited & sc["isact"] & sc["atend"]
+            s["status"] = s["status"].at[kk[:, None], sc["wida"]].max(
+                jnp.where(nd, DONE, 0))
+            # scanned warps blocked on long memory: deactivation candidates
+            ms = visited & sc["isact"] & ~sc["atend"] & ~sc["ready"] \
+                & (sc["blocked"] > 0)
+            stall_until = stall_until.at[kk[:, None], sc["wida"]].max(
+                jnp.where(ms, sc["blocked"], 0.0))
+            wsel = s["act"][kk, jnp.argmin(rrk, axis=1)]
+            s, happened, sfail = issue_one(s, picked, wsel)
+            issue_any = issue_any | happened
+            struct = struct | sfail
+        # two-level deactivation (cached designs swap stalled warps out)
+        de = (stall_until > 0) & (s["status"] == ACTIVE) \
+            & co["cached"][:, None] & act[:, None]
+        s["status"] = jnp.where(de, WAIT, s["status"])
+        s["ra"] = jnp.where(de, stall_until.astype(i64), s["ra"])
+        ivv = s["iv"]
+        ii = jnp.where(de & (ivv >= 0), ivv, IVS)
+        nwb = jnp.where(de, co["ivw"][kk[:, None], ii].astype(i64), 0) \
+            .sum(axis=1)
+        s["cwb"] += nwb
+        s["cm"] += nwb
+        s["iv"] = jnp.where(de, -1, s["iv"])
+        # compact the active list: drop deactivated (WAIT) + retired (DONE)
+        posv = aI[None, :] < s["na"][:, None]
+        wida = jnp.where(posv, s["act"], 0)
+        stw = s["status"][kk[:, None], wida]
+        gone = posv & act[:, None] & ((stw == WAIT) | (stw == DONE))
+        keep = posv & ~gone
+        perm = jnp.argsort(jnp.where(keep, 0, 1).astype(jnp.int32), axis=1,
+                           stable=True)
+        s["act"] = jnp.take_along_axis(s["act"], perm, axis=1)
+        s["na"] = keep.sum(axis=1).astype(s["na"].dtype)
+        # retire DONE warps from residency, admit pending warps
+        donep = posv & act[:, None] & (stw == DONE)
+        s["res"] = s["res"].at[kk[:, None], wida].min(~donep)
+        s["nr"] = s["nr"] - donep.sum(axis=1).astype(s["nr"].dtype)
+        nadm = jnp.maximum(
+            jnp.minimum(co["nw"] - s["ptr"], co["rcap"] - s["nr"]), 0)
+        nadm = jnp.where(act, nadm, 0)
+        newres = (wI[None, :] >= s["ptr"][:, None]) \
+            & (wI[None, :] < (s["ptr"] + nadm)[:, None])
+        s["res"] = s["res"] | newres
+        s["nr"] = s["nr"] + nadm
+        s["ptr"] = s["ptr"] + nadm
+        # one activation pass covers the scalar engines' interleaved
+        # deactivate()/cleanup activate() calls (admitted wids exceed every
+        # resident wid, so ascending-wid order is the same either way)
+        s = activation(s, act)
+        # terminate lanes with nothing resident and nothing pending
+        fin = act & (s["nr"] == 0) & (s["ptr"] >= co["nw"])
+        s["alive"] = s["alive"] & ~fin
+        adv = act & ~fin
+        # classify the zero-issue cycle + find the next event horizon
+        sc = scan(s)
+        live = sc["isact"] & ~sc["atend"]
+        saw_pf = (sc["posv"] & (sc["stat"] == PREFETCH)).any(axis=1)
+        saw_mem = (live & sc["pmem"]).any(axis=1)
+        saw_dep = (live & sc["pend"]).any(axis=1)
+        drain = (s["ptr"] >= co["nw"]) & (s["nr"] < co["tcap"])
+        cat = jnp.where(drain, _CAT_INDEX["drain"],
+              jnp.where(struct, _CAT_INDEX["bank_conflict"],
+              jnp.where(saw_pf, _CAT_INDEX["prefetch_stall"],
+              jnp.where(saw_mem, _CAT_INDEX["mem_stall"],
+              jnp.where(saw_dep, _CAT_INDEX["alu_dep"],
+                        _CAT_INDEX["scheduler_idle"])))))
+        cyc = s["cycle"]
+        cycf = cyc.astype(f64)
+        INF = jnp.inf
+        cf = s["col"].min(axis=1)
+        c1 = jnp.where(cf > cyc, cf.astype(f64), INF)
+        wnp = s["res"] & ((s["status"] == WAIT) | (s["status"] == PREFETCH))
+        c2 = jnp.where(wnp, s["ra"].astype(f64), INF).min(axis=1)
+        tsrc = jnp.where(live[:, :, None] & (sc["ts"] > cycf[:, None, None]),
+                         sc["ts"], INF).min(axis=(1, 2))
+        tpd = jnp.where(live[:, :, None] & (sc["tp"] > cycf[:, None, None]),
+                        sc["tp"], INF).min(axis=(1, 2))
+        best = jnp.minimum(jnp.minimum(c1, c2), jnp.minimum(tsrc, tpd))
+        nxt = jnp.where(jnp.isinf(best), cyc + 1,
+                        jnp.maximum(best.astype(i64), cyc + 1))
+        delta = jnp.where(issue_any, 1, nxt - cyc)
+        cati = jnp.where(issue_any, 0, cat)
+        oh = (jnp.arange(NCAT)[None, :] == cati[:, None]) & adv[:, None]
+        s["bd"] = s["bd"] + jnp.where(oh, delta[:, None], 0)
+        s["cycle"] = cyc + jnp.where(adv, delta, 0)
+        if _DEBUG_HOOK is not None:  # debug-only tracing (no jit cost when None)
+            _DEBUG_HOOK({"cycle": cyc, "issue": issue_any, "cat": cati,
+                         "delta": delta, "struct": struct, "na": s["na"],
+                         "act": s["act"], "s": s})
+        return s
+
+    def running(s):
+        return jnp.any(s["alive"]) & (s["guard"] <= _GUARD)
+
+    return lax.while_loop(running, tick, st)
+
+
+# Eager-only per-tick trace hook (set under jax.disable_jit(); checked at
+# trace time, so the jitted path never pays for it).
+_DEBUG_HOOK = None
+
+_JITTED = None
+
+
+def _get_runner():
+    global _JITTED
+    if _JITTED is None:
+        jax, _, _ = _jax()
+        _maybe_enable_compile_cache()
+        _JITTED = jax.jit(_run_jax)
+    return _JITTED
+
+
+def _run_lanes(lanes: Sequence[_Lane]) -> list:
+    from jax.experimental import enable_x64
+
+    co, st = _build(lanes)
+    with enable_x64():  # the scalar engines do Python-f64 arithmetic
+        out = _get_runner()(co, st)
+        out = {k: np.asarray(v) for k, v in out.items()}
+    if out["alive"].any():
+        raise RuntimeError("batch simulator wedged")
+    return [_extract(ln, i, out) for i, ln in enumerate(lanes)]
+
+
+def _extract(lane: _Lane, i: int, out: dict):
+    cfg = lane.cfg
+    if out["budget"][i]:
+        return SimBudgetExceeded(cfg.design, lane.workload.name,
+                                 cfg.max_cycles, int(out["cycle"][i]))
+    bd = new_breakdown()
+    for j, c in enumerate(CYCLE_CATEGORIES):
+        bd[c] = int(out["bd"][i, j])
+    res = SimResult(design=cfg.design, workload=lane.workload.name,
+                    cycles=int(out["cycle"][i]),
+                    instructions=int(out["issued"][i].sum()),
+                    resident_warps=lane.occupancy,
+                    rfc_hits=int(out["ch"][i]),
+                    rfc_accesses=int(out["ca"][i]),
+                    mrf_accesses=int(out["cm"][i]),
+                    prefetch_ops=int(out["cpo"][i]),
+                    prefetch_cycles=int(out["cpc"][i]),
+                    prefetch_stall_cycles=int(out["cps"][i]),
+                    writeback_regs=int(out["cwb"][i]),
+                    activations=int(out["cact"][i]),
+                    cycle_breakdown=bd)
+    check_breakdown(bd, res.cycles, cfg.design, lane.workload.name)
+    return res
+
+
+# --------------------------------------------------------------------------
+# Public API
+# --------------------------------------------------------------------------
+
+# Lanes per compiled run: bounds peak memory on huge sweeps while keeping
+# each launch big enough to amortize dispatch.
+_MAX_LANES = 512
+
+
+def run_batch(jobs: Sequence[tuple[Workload, SimConfig]], *,
+              fallback: bool = True) -> list:
+    """Simulate many (workload, config) jobs; vectorized where supported.
+
+    Returns one outcome per job, in order: a `SimResult`, or a
+    `SimBudgetExceeded` *instance* (not raised) for lanes that blew their
+    ``max_cycles`` watchdog — the sweep service records those as outcomes.
+    Unsupported configs (see `batch_supported`) fall back to the scalar
+    event-heap engine per job; pass ``fallback=False`` to get a
+    `ValueError` instead.
+    """
+    outcomes: list = [None] * len(jobs)
+    lanes: list[_Lane] = []
+    idxs: list[int] = []
+    for i, (w, cfg) in enumerate(jobs):
+        if batch_supported(cfg):
+            parse_interval_strategy(cfg.interval_strategy)  # raise like engine
+            code = _encode_plan(w, cfg)
+            lanes.append(_Lane(w, cfg, code, _occupancy(w, cfg)))
+            idxs.append(i)
+        elif fallback:
+            try:
+                outcomes[i] = simulate(w, cfg)
+            except SimBudgetExceeded as e:
+                outcomes[i] = e
+        else:
+            raise ValueError(
+                f"config not batch-supported (scheduler={cfg.scheduler!r}, "
+                f"bank_model={cfg.bank_model!r}, trace={cfg.trace}, "
+                f"num_sms={cfg.num_sms})")
+    for chunk, chunk_idxs in _chunk_lanes(lanes, idxs):
+        for i, r in zip(chunk_idxs, _run_lanes(chunk)):
+            outcomes[i] = r
+    return outcomes
+
+
+def _chunk_lanes(lanes: list[_Lane], idxs: list[int]):
+    """Partition lanes into compile-friendly, utilization-friendly chunks.
+
+    Lanes are grouped by the shape dimensions that dominate per-tick cost —
+    active-list width (8 for the cached designs vs. all-resident for
+    BL/RFC/Ideal), warp count, and the shared-RFC entry table — so a chunk
+    of LTRF lanes pays (K, 8) scheduler scans instead of inheriting (K, 64)
+    from one BL bystander.  Within a group, lanes are ordered by a crude
+    run-length estimate: the lockstep while-loop runs until the *slowest*
+    lane finishes, so co-scheduling similar-length lanes keeps the rest of
+    the chunk from idling (and finished lanes from being dead weight)."""
+    groups: dict[tuple, list[int]] = {}
+    for j, ln in enumerate(lanes):
+        cfg = ln.cfg
+        sig = (_bucket(cfg.num_warps, 4), _bucket(_acap(ln), 2),
+               cfg.rfc_entries if cfg.design == "RFC" else 0)
+        groups.setdefault(sig, []).append(j)
+    for sig, members in groups.items():
+        members.sort(key=lambda j: _length_hint(lanes[j]))
+        for lo in range(0, len(members), _MAX_LANES):
+            part = members[lo: lo + _MAX_LANES]
+            yield [lanes[j] for j in part], [idxs[j] for j in part]
+
+
+def _length_hint(ln: _Lane) -> float:
+    """Rough relative cycle count (ordering heuristic only)."""
+    cfg = ln.cfg
+    return (ln.code.n_pc * ln.occupancy
+            * (cfg.mrf_cycles + cfg.mem_cycles * (1.0 - cfg.l1_hit_rate)))
+
+
+def simulate_batch(jobs: Sequence[tuple[Workload, SimConfig]], *,
+                   fallback: bool = True) -> list[SimResult]:
+    """Like `run_batch` but raises the first `SimBudgetExceeded` (matching
+    the scalar `simulate` contract)."""
+    outcomes = run_batch(jobs, fallback=fallback)
+    for r in outcomes:
+        if isinstance(r, SimBudgetExceeded):
+            raise r
+    return outcomes
+
+
+def simulate_one(workload: Workload, cfg: SimConfig) -> SimResult:
+    """Single-job convenience wrapper over the batch path."""
+    return simulate_batch([(workload, cfg)])[0]

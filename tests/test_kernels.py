@@ -50,6 +50,7 @@ def test_matmul_block_sweep(blocks):
 @settings(max_examples=10, deadline=None)
 @given(m=st.integers(1, 3), k=st.integers(1, 4), n=st.integers(1, 3),
        seed=st.integers(0, 100))
+@pytest.mark.slow
 def test_matmul_property(m, k, n, seed):
     M, K, N = m * 64 + 32, k * 64, n * 64 + 16
     key = jax.random.PRNGKey(seed)
@@ -109,6 +110,7 @@ def test_flash_attention_non_causal():
 @settings(max_examples=8, deadline=None)
 @given(seed=st.integers(0, 50), h=st.sampled_from([1, 2, 4]),
        g=st.sampled_from([1, 2]), blocks=st.sampled_from([32, 64]))
+@pytest.mark.slow
 def test_flash_attention_property(seed, h, g, blocks):
     B, S, d = 1, 128, 32
     H, KV = h * g, h

@@ -145,6 +145,33 @@ def test_histogram_nearest_rank_percentiles():
         {"count": 0, "sum": 0.0}
 
 
+def test_histogram_nearest_rank_matches_naive_reference():
+    """Property test over (q, n) grids: the rank must equal the smallest
+    1-indexed rank r with r >= q*n — the nearest-rank definition spelled
+    out naively.  The old int-scaling trick (-(-int(q*n*100) // 100))
+    truncated before ceiling and silently under-ranked whenever q*n had a
+    fractional part below 0.01, e.g. (q=0.5000001, n=20)."""
+    from repro.obs.metrics import Histogram
+
+    def naive_rank(q, n):
+        r = 1
+        while r < n and r < q * n:
+            r += 1
+        return r
+
+    qs = (0.01, 0.05, 0.1, 0.25, 0.5, 0.5000001, 0.75, 0.9, 0.95,
+          0.99, 0.999, 1.0)
+    for n in (*range(1, 65), 100, 128, 999):
+        samples = [float(i) for i in range(1, n + 1)]  # value == rank
+        for q in qs:
+            got = Histogram._nearest_rank(samples, q)
+            assert got == float(naive_rank(q, n)), (q, n, got)
+    # an exact case the int-scaling bug got wrong: ceil(10.000002) is 11,
+    # but int(1000.0002) // 100 ceiled to 10
+    assert Histogram._nearest_rank([float(i) for i in range(1, 21)],
+                                   0.5000001) == 11.0
+
+
 def test_registry_get_or_create_and_kind_clash():
     reg = MetricsRegistry()
     assert reg.counter("x") is reg.counter("x")

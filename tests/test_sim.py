@@ -156,6 +156,7 @@ def test_paper_mrf_traffic_claim():
     assert 3.0 <= bl.mrf_accesses / lt.mrf_accesses <= 8.0
 
 
+@pytest.mark.slow
 def test_power_model_paper_claims():
     """§5.3: LTRF saves ~23% power same-tech; §1: DWM 8x + LTRF saves ~46%.
 

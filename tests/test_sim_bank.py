@@ -135,6 +135,7 @@ def test_icg_never_worse_than_identity(name):
     assert icg.ipc >= ident.ipc, name
 
 
+@pytest.mark.slow
 def test_icg_strictly_fewer_conflict_cycles_in_aggregate():
     """ISSUE-4 acceptance: strictly fewer bank-conflict cycles across the
     tracked sweep (both Table-2 design points)."""

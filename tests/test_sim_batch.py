@@ -1,0 +1,185 @@
+"""Tests for the vectorized batch simulation engine (`repro.sim.batch`).
+
+Three layers:
+
+* cheap structural tests (the `batch_supported` gate, scalar fallback,
+  chunk grouping, sweep-service batch-mode policy) that never touch jax;
+* bit-identity pins on the jitted path, including the FMA-contraction
+  regression case that originally diverged;
+* slow-lane A/B matrices (heterogeneous batches, the sweep service's
+  batch prefill path) that run the full lockstep loop.
+
+The bit-identity contract these enforce: for every `batch_supported`
+config, `run_batch` produces `SimResult`s equal — every counter AND the
+full `cycle_breakdown` — to the event-heap engine, which is itself pinned
+bit-identical to the frozen `golden.py` oracle.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+
+import pytest
+
+from repro.sim import (
+    DESIGNS, SimBudgetExceeded, SimConfig, batch_supported, design_config,
+    run_batch, simulate, simulate_batch, simulate_one,
+)
+from repro.workloads import WORKLOADS
+
+
+# ------------------------------------------------------------ gate + fallback
+
+def test_batch_supported_gate():
+    """Exactly the golden-pinned domain: two-level scheduler, no bank
+    arbitration, untraced, single SM.  Compile-side knobs (design,
+    interval strategy, renumbering) never disqualify a config."""
+    base = design_config("LTRF", table2_config=7, num_warps=8)
+    assert batch_supported(base)
+    for d in DESIGNS:
+        assert batch_supported(replace(base, design=d)), d
+    assert batch_supported(replace(base, interval_strategy="fixed:4"))
+    assert batch_supported(replace(base, renumber="identity"))
+    assert not batch_supported(replace(base, scheduler="gto"))
+    assert not batch_supported(replace(base, scheduler="lrr"))
+    assert not batch_supported(replace(base, bank_model="arbitrated"))
+    assert not batch_supported(replace(base, trace=True))
+    assert not batch_supported(replace(base, num_sms=2))
+
+
+def test_run_batch_falls_back_to_scalar_engine():
+    """Unsupported configs ride the event-heap engine job by job (same
+    results), or raise when the caller forbids the fallback."""
+    w = WORKLOADS["kmeans"]
+    cfg = replace(design_config("LTRF", table2_config=7, num_warps=4),
+                  scheduler="gto")
+    assert not batch_supported(cfg)
+    assert run_batch([(w, cfg)]) == [simulate(w, cfg)]
+    with pytest.raises(ValueError):
+        run_batch([(w, cfg)], fallback=False)
+
+
+def test_chunk_lanes_groups_by_shape():
+    """Chunking keeps cheap lanes out of expensive shapes: a BL lane (all
+    resident warps active) must not share a chunk with an LTRF lane (8
+    active slots), and every lane survives chunking exactly once."""
+    from repro.sim import batch as B
+
+    w = WORKLOADS["kmeans"]
+    lanes = []
+    for d in ("BL", "LTRF", "LTRF_plus", "Ideal"):
+        cfg = design_config(d, table2_config=7, num_warps=16)
+        lanes.append(B._Lane(w, cfg, B._encode_plan(w, cfg),
+                             B._occupancy(w, cfg)))
+    chunks = list(B._chunk_lanes(lanes, list(range(len(lanes)))))
+    seen = sorted(i for _, idxs in chunks for i in idxs)
+    assert seen == list(range(len(lanes)))
+    for chunk, idxs in chunks:
+        assert len(chunk) == len(idxs) <= B._MAX_LANES
+        acaps = {B._bucket(B._acap(ln), 2) for ln in chunk}
+        assert len(acaps) == 1  # one active-width bucket per chunk
+    by_design = {ln.cfg.design: ci for ci, (chunk, _) in enumerate(chunks)
+                 for ln in chunk}
+    assert by_design["BL"] != by_design["LTRF"]
+    assert by_design["LTRF"] == by_design["LTRF_plus"]
+
+
+# --------------------------------------------------------- jitted-path pins
+
+def test_fma_contraction_regression_pin():
+    """BL/kmeans at Table-2 #7, 16 warps: the exact case where XLA's CPU
+    FMA contraction silently changed a token-bucket float compare until the
+    engine's mul-add sites were made contraction-proof.  Full-structure
+    equality (breakdown included) with the event engine."""
+    w = WORKLOADS["kmeans"]
+    cfg = design_config("BL", table2_config=7, num_warps=16)
+    assert simulate_one(w, cfg) == simulate(w, cfg)
+
+
+def test_budget_outcomes_returned_not_raised():
+    """`run_batch` reports watchdog trips as `SimBudgetExceeded` instances
+    in the outcome list (the sweep service records them as job outcomes);
+    `simulate_batch` re-raises to match the scalar `simulate` contract."""
+    w = WORKLOADS["kmeans"]
+    cfg = design_config("BL", table2_config=7, num_warps=16)
+    ref = simulate(w, cfg)
+    tight = replace(cfg, max_cycles=max(1, ref.cycles // 2))
+    ok, tripped = run_batch([(w, cfg), (w, tight)])
+    assert ok == ref
+    assert isinstance(tripped, SimBudgetExceeded)
+    with pytest.raises(SimBudgetExceeded) as event_exc:
+        simulate(w, tight)
+    assert tripped.args == event_exc.value.args
+    with pytest.raises(SimBudgetExceeded):
+        simulate_batch([(w, cfg), (w, tight)])
+
+
+@pytest.mark.slow
+def test_heterogeneous_batch_bit_identical():
+    """One `run_batch` call over a mixed pile — every design, two
+    workloads, differing latency multipliers — matches per-job `simulate`
+    bit-for-bit.  This is the acceptance shape of the tracked sweep."""
+    jobs = []
+    for d in DESIGNS:
+        for name in ("srad", "btree"):
+            jobs.append((WORKLOADS[name],
+                         design_config(d, table2_config=7, num_warps=8)))
+    jobs.append((WORKLOADS["srad"],
+                 design_config("LTRF", mrf_latency_mult=2.8, rf_size_kb=256,
+                               num_warps=8)))
+    for (w, cfg), got in zip(jobs, run_batch(jobs, fallback=False)):
+        assert got == simulate(w, cfg), (cfg.design, w.name)
+
+
+# ------------------------------------------------------ sweep-service path
+
+def _runner(tmp_path, **kw):
+    from repro.serving.sweep import SimRunner
+    return SimRunner(processes=1, cache_dir=tmp_path / "cache", **kw)
+
+
+def test_sweep_batch_mode_policy(tmp_path, monkeypatch):
+    """Explicit flag beats env var beats auto; fault plans force it off
+    (the chaos harness targets the per-job classic path)."""
+    from repro.serving import faults
+
+    r = _runner(tmp_path)
+    monkeypatch.delenv("REPRO_SIM_BATCH", raising=False)
+    assert r._batch_mode() == "auto"
+    monkeypatch.setenv("REPRO_SIM_BATCH", "1")
+    assert r._batch_mode() == "on"
+    monkeypatch.setenv("REPRO_SIM_BATCH", "0")
+    assert r._batch_mode() == "off"
+    assert _runner(tmp_path, batch=True)._batch_mode() == "on"
+    monkeypatch.setenv("REPRO_SIM_BATCH", "1")
+    assert _runner(tmp_path, batch=False)._batch_mode() == "off"
+    on = _runner(tmp_path, batch=True)
+    monkeypatch.setattr(faults, "active_plan", lambda: faults.FaultPlan())
+    assert on._batch_mode() == "off"
+
+
+@pytest.mark.slow
+def test_sweep_runner_batch_prefill(tmp_path):
+    """`SimRunner(batch=True)` computes cache misses through the batch
+    engine — same results as the classic path, `batched` stat accounted,
+    report coherent, and everything lands in the disk cache."""
+    cfgs = [design_config(d, table2_config=7, num_warps=4)
+            for d in ("BL", "LTRF")]
+    jobs = [(name, cfg) for name in ("kmeans", "bfs") for cfg in cfgs]
+
+    batched = _runner(tmp_path / "b", batch=True)
+    rep = batched.prefill(jobs)
+    assert rep.ok and rep.computed == len(jobs)
+    assert batched.stats["batched"] == len(jobs)
+    assert batched.stats["computed"] == len(jobs)
+
+    classic = _runner(tmp_path / "c", batch=False)
+    classic.prefill(jobs)
+    assert classic.stats["batched"] == 0
+    for name, cfg in jobs:
+        assert batched.sim(name, cfg) == classic.sim(name, cfg) \
+            == simulate(WORKLOADS[name], cfg), (name, cfg.design)
+
+    # a second prefill is pure cache: nothing recomputed, nothing batched
+    rep2 = batched.prefill(jobs)
+    assert rep2.cached == len(jobs) and rep2.computed == 0
+    assert batched.stats["batched"] == len(jobs)

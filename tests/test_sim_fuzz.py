@@ -316,6 +316,57 @@ def test_fuzz_watchdog_budget(seed):
            (g.design, g.workload, g.budget, g.cycles), seed
 
 
+# ------------------------------------------- batch-engine fuzzed invariants
+
+N_BATCH_SEEDS = 16
+
+
+@pytest.mark.slow
+def test_fuzz_batch_engine_matches_event_heap():
+    """Differential A/B for the vectorized batch engine: one `run_batch`
+    call over a pile of random (program, config) pairs must be bit-identical
+    — every counter, the full cycle_breakdown — to per-job `simulate`.
+    The fuzz configs all sit inside `batch_supported` (two_level scheduler,
+    bank_model="none", untraced, single SM), so nothing here silently falls
+    back to the scalar path."""
+    from repro.sim import batch_supported, run_batch
+
+    jobs = []
+    for seed in range(N_BATCH_SEEDS):
+        w = random_workload(900 + seed)
+        cfg = random_config(900 + seed)
+        assert batch_supported(cfg), seed
+        jobs.append((w, cfg))
+    for seed, (w, cfg), got in zip(range(N_BATCH_SEEDS), jobs,
+                                   run_batch(jobs, fallback=False)):
+        want = simulate(w, cfg)
+        assert got == want, (seed, cfg.design, got, want)
+
+
+@pytest.mark.slow
+def test_fuzz_batch_watchdog_budget_parity():
+    """The `max_cycles` watchdog trips identically in the batch engine: the
+    returned `SimBudgetExceeded` *instance* carries the same (design,
+    workload, budget, trip-cycle) the event engine raises, and a generous
+    budget stays a bit-identical no-op."""
+    from repro.sim import SimBudgetExceeded, run_batch
+
+    for seed in (5, 11):  # reuse batch-fuzz pairs: compiles stay cached
+        w = random_workload(900 + seed)
+        cfg = random_config(900 + seed)
+        ref = simulate(w, cfg)
+        budget = max(1, ref.cycles // 3)
+        tight, loose = (replace(cfg, max_cycles=budget),
+                        replace(cfg, max_cycles=ref.cycles + 1000))
+        out_tight, out_loose = run_batch([(w, tight), (w, loose)],
+                                         fallback=False)
+        assert out_loose == ref, seed
+        assert isinstance(out_tight, SimBudgetExceeded), seed
+        with pytest.raises(SimBudgetExceeded) as event_exc:
+            simulate(w, tight)
+        assert out_tight.args == event_exc.value.args, seed
+
+
 # -------------------------------------- observability fuzzed invariants
 
 @pytest.mark.parametrize("seed", range(700, 718))

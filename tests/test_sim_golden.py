@@ -129,6 +129,25 @@ def test_listing1_cycle_breakdown_pinned(design):
     assert golden_simulate(w, cfg).cycle_breakdown == r.cycle_breakdown
 
 
+def test_listing1_pins_via_batch_engine():
+    """Tentpole acceptance: the vectorized batch engine reproduces the exact
+    Listing-1 pins — counters AND the full cycle attribution — for all 7
+    designs in one `run_batch` call, bit-identical to the event engine."""
+    from repro.sim import run_batch
+
+    w = listing1_workload()
+    jobs = [(w, design_config(d, table2_config=7, num_warps=16))
+            for d in DESIGNS]
+    for design, (_, cfg), r in zip(DESIGNS, jobs, run_batch(jobs)):
+        got = (r.cycles, r.instructions, r.mrf_accesses, r.rfc_hits,
+               r.rfc_accesses)
+        assert got == LISTING1_GOLDEN[design], (design, got)
+        assert tuple(r.cycle_breakdown.values()) == \
+            LISTING1_BREAKDOWN[design], design
+        # full-structure equality with the scalar engine, not just counters
+        assert r == simulate(w, cfg), design
+
+
 # Exact counters for the lifted ltrf_matmul reference (the traced frontend's
 # flagship kernel) at Table-2 config #7, 16 warps: behavioural drift in the
 # jaxpr lifter, the register allocator, OR the engine shows up here.
@@ -155,6 +174,7 @@ def test_traced_matmul_counters_pinned(design):
     assert golden_simulate(w, cfg) == r
 
 
+@pytest.mark.slow
 def test_bank_model_none_bit_identical_to_golden():
     """ISSUE 4 acceptance pin: the bank-arbitration knob at its default
     ``bank_model="none"`` is a strict no-op — bit-identical to the frozen

@@ -152,6 +152,7 @@ def test_capacity_never_worse_per_workload(name):
     assert cap.ipc >= paper.ipc, name
 
 
+@pytest.mark.slow
 def test_capacity_strictly_fewer_stall_cycles_in_aggregate():
     """ISSUE-5 acceptance: strictly fewer aggregate prefetch-stall cycles
     across the high-register-pressure workloads — the verdict recorded in
@@ -179,6 +180,7 @@ def test_capacity_working_sets_respect_rfc_capacity():
                    for op in s.pf_ops.values()), name
 
 
+@pytest.mark.slow
 def test_interval_sweep_section_verdicts():
     """The bench emitter computes the same verdicts this suite pins (on a
     reduced workload slice so CI stays fast)."""

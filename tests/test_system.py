@@ -22,6 +22,7 @@ def _synth_workloads():
     return [WORKLOADS[n] for n in workload_names()]
 
 
+@pytest.mark.slow
 def test_paper_headline_claim():
     """An 8x-capacity, 6.3x-slower MRF + LTRF_conf stays competitive with the
     fast-RF baseline on register-sensitive workloads (paper: +34% avg; the
@@ -37,6 +38,7 @@ def test_paper_headline_claim():
     assert max(vals) > 1.1  # some workloads gain substantially
 
 
+@pytest.mark.slow
 def test_ltrf_beats_bl_and_rfc_at_slow_mrf():
     """The ordering that motivates the paper (Fig 14 at config #7)."""
     import math
@@ -56,6 +58,7 @@ def test_ltrf_beats_bl_and_rfc_at_slow_mrf():
     assert r["LTRF_conf"] >= r["LTRF"]
 
 
+@pytest.mark.slow
 def test_latency_tolerance_ordering_paper_fig15():
     from repro.sim import max_tolerable_latency
     w = WORKLOADS["mri-q"]
@@ -130,6 +133,7 @@ def test_trained_model_serves(tmp_path):
     assert len(toks) >= 4 and all(0 <= t < cfg.vocab for t in toks)
 
 
+@pytest.mark.slow
 def test_compression_trains_losslessly_enough(tmp_path):
     """int8 EF compression must not blow up training."""
     from repro.launch.train import train
@@ -141,6 +145,7 @@ def test_compression_trains_losslessly_enough(tmp_path):
     assert abs(a["losses"][-1] - b["losses"][-1]) < 0.5
 
 
+@pytest.mark.slow
 def test_grad_accum_matches_full_batch():
     """n_micro=2 must match the single-shot gradient step numerically."""
     from repro.configs import get_smoke
