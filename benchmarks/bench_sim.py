@@ -41,9 +41,15 @@ per-design aggregate breakdowns/fractions and the ISSUE-7 verdicts (every
 breakdown sums exactly to its run's cycles; the LTRF designs strictly
 shrink BL's exposed mem-stall cycles and total cycles) — and ``--obs-smoke``
 runs the observability acceptance smoke (invariant + Chrome-trace artifact
-+ metrics snapshot) standalone for CI.  Full runs also fold the sweep's
-`SweepReport` and the runner's metrics snapshot into ``sim_cache`` in the
-artifact, keyed by the sweep's deterministic ``run_id``.
++ metrics snapshot) standalone for CI.  The analytical fast tier
+(`repro.sim.analytic`) is differentially validated under ``analytic_tier``
+— pooled and per-group Spearman rank correlation, per-point relative cycle
+error and Pareto-frontier recall vs engine results from the *same*
+invocation, a real hybrid-tier confirmation sweep, and the 100x throughput
+gate — and ``--analytic-smoke`` runs the reduced-domain version standalone
+for CI, writing ``BENCH_analytic_smoke.json``.  Full runs also fold the
+sweep's `SweepReport` and the runner's metrics snapshot into ``sim_cache``
+in the artifact, keyed by the sweep's deterministic ``run_id``.
 
 Usage::
 
@@ -63,6 +69,13 @@ Usage::
     python -m benchmarks.bench_sim --batch-smoke  # vectorized batch engine
                                                 # vs event-heap A/B:
                                                 # bit-identity + speedup (CI)
+    python -m benchmarks.bench_sim --analytic-smoke  # analytical fast tier
+                                                # vs engine: Spearman rho +
+                                                # frontier recall + 100x
+                                                # throughput gates (CI)
+    python -m benchmarks.bench_sim --fit-calibration  # re-fit the analytic
+                                                # tier's coefficients on this
+                                                # host and persist them
     python -m benchmarks.bench_sim --suite traced   # sweep the lifted
                                                 # real kernels (untracked)
     python -m benchmarks.bench_sim --baseline   # re-measure the golden
@@ -83,7 +96,7 @@ from benchmarks.orchestrator import SimRunner, default_processes
 from benchmarks.sweep_subset import (
     BREAKDOWN_DESIGNS, INTERVAL_SWEEP_CAP, INTERVAL_VERDICT_DESIGN,
     SWEEP_DESIGNS, bank_sweep_jobs, breakdown_sweep_jobs, gpu_sweep_jobs,
-    interval_sweep_jobs, sweep_jobs,
+    interval_sweep_jobs, screening_jobs, sweep_jobs,
 )
 from repro.workloads import get_workload
 
@@ -298,6 +311,178 @@ def measure_batch_smoke(out_path: pathlib.Path = BATCH_SMOKE_OUT_PATH) -> dict:
         "verdicts": verdicts,
         "all_verdicts_pass": all(gating.values()),
     }
+    out_path.write_text(json.dumps(report, indent=1) + "\n")
+    print(f"# wrote {out_path}", file=sys.stderr)
+    return report
+
+
+ANALYTIC_SMOKE_OUT_PATH = ROOT / "BENCH_analytic_smoke.json"
+# The trust gates the differential harness enforces (ISSUE 9 acceptance):
+# the analytical tier is only usable for screening if its *ranking* of
+# design points tracks the engine's, its Pareto frontier never misses an
+# engine-frontier point, and it is actually orders of magnitude faster.
+ANALYTIC_RHO_MIN = 0.9        # pooled Spearman rho vs engine cycles
+ANALYTIC_RECALL_MIN = 1.0     # engine frontier points recalled by hybrid
+ANALYTIC_SPEEDUP_MIN = 100.0  # analytic vs engine sim-instr/s, same host
+ANALYTIC_SMOKE_WORKLOADS = ("srad", "kmeans", "bfs", "sgemm")
+
+
+def measure_analytic_tier(jobs=None, engine_results=None,
+                          engine_instr_per_s: float | None = None,
+                          processes=None, top_k: int = 3) -> dict:
+    """The differential accuracy harness for the analytical fast tier
+    (BENCH_sim.json's ``analytic_tier`` section; CI's ``--analytic-smoke``).
+
+    Prices every analytic-supported job with `repro.sim.analytic.estimate`
+    and compares against cycle-accurate engine results *from the same
+    invocation*: pooled + per-(workload, rf-size) Spearman rank correlation,
+    per-point relative cycle error, and — the number that decides whether
+    hybrid screening can be trusted — frontier recall: in every group, the
+    engine's true Pareto frontier over (cycles, MRF accesses) must be a
+    subset of what the analytic tier selects for confirmation (its own
+    estimated frontier plus the ``top_k`` best-cycle points, exactly the
+    `SimRunner._prefill_hybrid` selection rule).  A hybrid prefill then runs
+    for real and must engine-confirm every selected point.  Throughput is
+    measured warm (estimates per second with hot plan caches — the
+    steady-state screening rate) and cold, and compared against an engine
+    rate measured fresh on this host in this invocation."""
+    from repro.sim.analytic import (ANALYTIC_REV, CALIB_REV,
+                                    analytic_supported, pareto_frontier,
+                                    spearman_rho)
+
+    if jobs is None:
+        jobs = sweep_jobs()
+    uniq = list(dict.fromkeys(jobs))
+    supported = [j for j in uniq if analytic_supported(j[1])]
+
+    # engine reference: reuse the invocation's results when given (the full
+    # bench passes the fast-path sweep), else compute through the cache
+    runner = SimRunner(processes=processes)
+    if engine_results is None:
+        runner.prefill(supported, tier="engine")
+        engine_results = {j: runner.sim(*j) for j in supported}
+    if engine_instr_per_s is None:
+        # fresh serial engine sample on this host (cache bypassed), so the
+        # speedup verdict never compares against another machine's number
+        sample = supported[::max(1, len(supported) // 4)][:4]
+        timing = SimRunner(processes=1, disk_cache=False)
+        t0 = time.time()
+        sample_instr = sum(timing.sim(*j).instructions for j in sample)
+        engine_instr_per_s = sample_instr / max(time.time() - t0, 1e-9)
+
+    # analytic timing: cold = first pass this invocation (may compile),
+    # warm = re-estimated with hot plan/profile caches (the steady-state
+    # screening throughput a million-point sweep would see)
+    fast = SimRunner(processes=1, disk_cache=False)
+    t0 = time.time()
+    ests = {j: fast.estimate(*j) for j in supported}
+    cold_wall = time.time() - t0
+    fast._analytic_memo.clear()
+    t0 = time.time()
+    ests = {j: fast.estimate(*j) for j in supported}
+    warm_wall = time.time() - t0
+    total_instr = sum(e.instructions for e in ests.values())
+    warm_per_s = total_instr / max(warm_wall, 1e-9)
+    speedup = warm_per_s / max(engine_instr_per_s, 1e-9)
+
+    # pooled + per-group rank accuracy and relative error
+    est_c = [float(ests[j].cycles) for j in supported]
+    eng_c = [float(engine_results[j].cycles) for j in supported]
+    pooled_rho = spearman_rho(est_c, eng_c)
+    rel = sorted(abs(e - g) / max(g, 1.0) for e, g in zip(est_c, eng_c))
+    groups: dict[tuple, list] = {}
+    for j in supported:
+        groups.setdefault((j[0], j[1].rf_size_kb), []).append(j)
+    group_rhos = []
+    frontier_total = frontier_hit = 0
+    group_rows = []
+    for (wname, rf_kb), members in sorted(groups.items()):
+        ec = [float(engine_results[j].cycles) for j in members]
+        ea = [float(ests[j].cycles) for j in members]
+        rho = spearman_rho(ea, ec)
+        if len(members) >= 3:
+            group_rhos.append(rho)
+        eng_front = set(pareto_frontier(
+            [(float(engine_results[j].cycles),
+              float(engine_results[j].mrf_accesses)) for j in members]))
+        est_pts = [(float(ests[j].cycles),
+                    float(ests[j].est_mrf_accesses)) for j in members]
+        picked = set(pareto_frontier(est_pts))
+        picked.update(sorted(range(len(members)),
+                             key=lambda i: est_pts[i][0])[:top_k])
+        hit = len(eng_front & picked)
+        frontier_total += len(eng_front)
+        frontier_hit += hit
+        group_rows.append({"workload": wname, "rf_size_kb": rf_kb,
+                           "points": len(members), "rho": round(rho, 4),
+                           "engine_frontier": len(eng_front),
+                           "recalled": hit})
+    recall = frontier_hit / max(frontier_total, 1)
+
+    # the hybrid tier for real: every selected point must come back with an
+    # engine verdict through the ordinary cache/retry machinery
+    hyb = SimRunner(processes=processes, cache_dir=runner.cache_dir)
+    hyb_rep = hyb.prefill(supported, tier="hybrid", top_k=top_k)
+
+    verdicts = {
+        "spearman_rho_ge_min": pooled_rho >= ANALYTIC_RHO_MIN,
+        "frontier_recall_pinned": recall >= ANALYTIC_RECALL_MIN,
+        "throughput_ge_100x_engine": speedup >= ANALYTIC_SPEEDUP_MIN,
+        "hybrid_confirms_selection":
+            hyb_rep.ok and len(hyb_rep.frontier_jobs) > 0
+            and hyb_rep.frontier_confirmed == len(hyb_rep.frontier_jobs),
+    }
+    return {
+        "analytic_rev": ANALYTIC_REV,
+        "calib_rev": CALIB_REV,
+        "calibration": runner.calibration().source,
+        "sims": len(supported),
+        "unsupported_sims": len(uniq) - len(supported),
+        "groups": len(groups),
+        "host": host_facts(1),
+        "pooled_spearman_rho": round(pooled_rho, 4),
+        "group_rho_mean": round(sum(group_rhos) / max(len(group_rhos), 1), 4),
+        "group_rho_min": round(min(group_rhos), 4) if group_rhos else None,
+        "rel_err": {
+            "mean": round(sum(rel) / max(len(rel), 1), 4),
+            "p50": round(rel[len(rel) // 2], 4) if rel else None,
+            "p90": round(rel[int(len(rel) * 0.9)], 4) if rel else None,
+            "max": round(rel[-1], 4) if rel else None,
+        },
+        "frontier": {"top_k": top_k, "engine_points": frontier_total,
+                     "recalled": frontier_hit, "recall": round(recall, 4)},
+        "throughput": {
+            "cold_wall_s": round(cold_wall, 3),
+            "warm_wall_s": round(warm_wall, 4),
+            "sim_instructions": total_instr,
+            "analytic_instr_per_s": round(warm_per_s, 1),
+            "engine_instr_per_s": round(engine_instr_per_s, 1),
+            "speedup_vs_engine": round(speedup, 1),
+        },
+        "hybrid_report": hyb_rep.to_dict(),
+        "per_group": group_rows,
+        "thresholds": {"rho_min": ANALYTIC_RHO_MIN,
+                       "recall_min": ANALYTIC_RECALL_MIN,
+                       "speedup_min": ANALYTIC_SPEEDUP_MIN},
+        "verdicts": verdicts,
+        "all_verdicts_pass": all(verdicts.values()),
+    }
+
+
+def measure_analytic_smoke(
+        out_path: pathlib.Path = ANALYTIC_SMOKE_OUT_PATH) -> dict:
+    """The fast-lane differential smoke (CI's ``--analytic-smoke`` step).
+
+    The full tracked-domain harness shrunk to four workloads at Table-2
+    config #7 so a cold CI container finishes in well under 30 s; same
+    metrics, same trust gates, written to ``BENCH_analytic_smoke.json``
+    (uploaded as a CI artifact).  The full-domain numbers land in
+    BENCH_sim.json's ``analytic_tier`` section on full bench runs."""
+    jobs = sweep_jobs(workloads=ANALYTIC_SMOKE_WORKLOADS,
+                      table2_configs=(7,))
+    report = measure_analytic_tier(jobs, processes=1)
+    report["sweep"] = (f"analytic_smoke({len(ANALYTIC_SMOKE_WORKLOADS)} "
+                       "workloads x 7 designs + baselines, tc7)")
     out_path.write_text(json.dumps(report, indent=1) + "\n")
     print(f"# wrote {out_path}", file=sys.stderr)
     return report
@@ -690,6 +875,10 @@ def run_bench(smoke: bool = False, processes: int | None = None,
         report["batch_engine"] = measure_batch_engine(
             jobs, reference=reference,
             event_instr_per_s=report["sim_instr_per_s"])
+        report["analytic_tier"] = measure_analytic_tier(
+            jobs, engine_results=reference,
+            engine_instr_per_s=report["sim_instr_per_s"],
+            processes=processes)
         report["gpu_sweep"] = measure_gpu_sweep(processes=processes)
         report["bank_sweep"] = measure_bank_sweep(processes=processes,
                                                   suite=suite)
@@ -744,6 +933,20 @@ def main(argv=None) -> None:
                          "written as a Chrome-trace artifact, and the "
                          "sweep-service metrics snapshot; exits non-zero on "
                          "any failed verdict (CI obs smoke)")
+    ap.add_argument("--fit-calibration", action="store_true",
+                    help="re-fit the analytical tier's exposure coefficients "
+                         "against engine runs of the tracked sweep domain "
+                         "(cache-accelerated) and persist them to the sim "
+                         "cache's analytic_calib.json for SimRunner to pick "
+                         "up; prints the fitted calibration")
+    ap.add_argument("--analytic-smoke", action="store_true",
+                    help="run the analytical-tier differential smoke: "
+                         "Spearman rank correlation, relative error and "
+                         "Pareto-frontier recall vs the engine, plus the "
+                         "hybrid-tier confirmation sweep and the 100x "
+                         "throughput gate; writes BENCH_analytic_smoke.json "
+                         "and exits non-zero on any failed verdict (CI "
+                         "analytic smoke)")
     ap.add_argument("--chaos-smoke", action="store_true",
                     help="run a small sweep under injected faults (crash + "
                          "hang + transient + corrupt cache entry) and "
@@ -778,6 +981,32 @@ def main(argv=None) -> None:
         if not report["all_verdicts_pass"]:
             failed = [k for k, v in report["verdicts"].items() if not v]
             print(f"# obs smoke FAILED: {failed}", file=sys.stderr)
+            sys.exit(1)
+        return
+    if args.fit_calibration:
+        from repro.serving.sweep import CALIBRATION_KEY
+        from repro.sim.analytic import (analytic_supported,
+                                        calibration_to_dict, fit_calibration,
+                                        save_calibration)
+
+        runner = SimRunner(processes=args.procs)
+        jobs = [j for j in dict.fromkeys(sweep_jobs(suite=args.suite))
+                if analytic_supported(j[1])]
+        runner.prefill(jobs, tier="engine")
+        samples = [(get_workload(n), cfg, runner.sim(n, cfg).cycles)
+                   for n, cfg in jobs]
+        calib = fit_calibration(samples)
+        path = runner.store.path(CALIBRATION_KEY)
+        save_calibration(calib, path)
+        print(f"# wrote {path}", file=sys.stderr)
+        print(json.dumps(calibration_to_dict(calib), indent=1))
+        return
+    if args.analytic_smoke:
+        report = measure_analytic_smoke()
+        print(json.dumps(report, indent=1))
+        if not report["all_verdicts_pass"]:
+            failed = [k for k, v in report["verdicts"].items() if not v]
+            print(f"# analytic smoke FAILED: {failed}", file=sys.stderr)
             sys.exit(1)
         return
     if args.chaos_smoke:

@@ -13,6 +13,7 @@ real lifted kernels instead.
 from __future__ import annotations
 
 from repro.sim import SimConfig, baseline_config, design_config
+from repro.sim.designs import TOLERANCE_MULTS
 from repro.workloads import get_workload, workload_names
 
 SWEEP_DESIGNS = ("BL", "RFC", "SHRF", "LTRF", "LTRF_conf", "LTRF_plus", "Ideal")
@@ -123,3 +124,38 @@ def sweep_jobs(workloads=None, designs=SWEEP_DESIGNS,
             for d in designs:
                 jobs.append((name, design_config(d, table2_config=tc)))
     return jobs
+
+
+def screening_jobs(workloads=None, designs=SWEEP_DESIGNS,
+                   rf_sizes_kb=(256, 2048),
+                   mults=TOLERANCE_MULTS,
+                   schedulers=("two_level", "gto"),
+                   suite: str | None = None) -> list[tuple[str, SimConfig]]:
+    """The *screening-scale* grid for the analytical fast tier (ISSUE 9).
+
+    `sweep_jobs`' design x workload matrix crossed with the full
+    tolerated-latency axis, the RF-capacity axis, and the single-SM
+    scheduler axis — thousands of unique points, far past what the
+    cycle-accurate engine can sweep on the tracked host.  Meant for
+    ``SimRunner.prefill(jobs, tier="analytic"|"hybrid")``; running it at
+    ``tier="engine"`` is possible but takes hours, not milliseconds."""
+    names = list(workloads) if workloads else list(workload_names(suite))
+    # dict.fromkeys: designs that pin an axis (Ideal forces mult 1.0)
+    # collapse to one point instead of repeating it per swept value
+    return list(dict.fromkeys(
+        (name, design_config(d, table2_config=7, rf_size_kb=kb,
+                             mrf_latency_mult=float(m), scheduler=s))
+        for kb in rf_sizes_kb for name in names for d in designs
+        for m in mults for s in schedulers
+    ))
+
+
+def run_tier_sweep(jobs, tier: str, runner=None, top_k: int = 3):
+    """Run `jobs` at `tier` through a `SimRunner`, returning
+    ``(runner, report)``.  Thin convenience for notebooks/benchmarks: the
+    caller keeps the runner to read confirmed `sim()` results or fast
+    `estimate()`s afterwards."""
+    from repro.serving.sweep import SimRunner
+    runner = runner or SimRunner(processes=1)
+    report = runner.prefill(list(jobs), tier=tier, top_k=top_k)
+    return runner, report

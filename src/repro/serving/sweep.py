@@ -56,6 +56,11 @@ from repro.core.plan_cache import PLAN_REV
 from repro.obs.metrics import MetricsRegistry
 from repro.serving import faults
 from repro.sim import SimBudgetExceeded, SimConfig, SimResult, simulate
+from repro.sim.analytic import (ANALYTIC_REV, CALIB_REV, DEFAULT_CALIBRATION,
+                                TIERS, AnalyticResult, Calibration,
+                                CalibrationError, analytic_supported,
+                                estimate as analytic_estimate,
+                                load_calibration, pareto_frontier)
 from repro.sim.engine import ENGINE_REV
 from repro.sim.gpu import GpuResult, aggregate, per_sm_configs
 from repro.workloads import get_workload
@@ -131,6 +136,35 @@ def sim_key(workload: str, cfg: SimConfig) -> str:
     return hashlib.sha1(payload.encode()).hexdigest()[:20]
 
 
+def analytic_sim_key(workload: str, cfg: SimConfig,
+                     calib: Calibration) -> str:
+    """Stable on-disk key for one *analytical* estimate.
+
+    Deliberately a different namespace from `sim_key`: the payload leads
+    with an ``"analytic"`` tag plus `ANALYTIC_REV`/`CALIB_REV` and the
+    calibration coefficient fingerprint, so a fast-tier estimate can never
+    collide with (or be replayed as) an engine verdict, and re-fitting the
+    calibration invalidates exactly the estimates it would change."""
+    cfg_payload = asdict(cfg)
+    cfg_payload.pop("max_cycles", None)
+    cfg_payload.pop("trace", None)
+    payload = json.dumps(
+        [["analytic", ANALYTIC_REV, CALIB_REV, ENGINE_REV, PLAN_REV,
+          PIPELINE_REV], calib.fingerprint(), workload, cfg_payload],
+        sort_keys=True)
+    return "an" + hashlib.sha1(payload.encode()).hexdigest()[:18]
+
+
+# Calibration constants live in the result store root under this key so the
+# store's quarantine machinery covers a corrupt calibration file exactly
+# like a corrupt result entry.
+CALIBRATION_KEY = "analytic_calib"
+
+# Hybrid tier: engine-confirm the analytic Pareto frontier plus this many
+# best-estimated-cycles points per workload group.
+DEFAULT_TOP_K = 3
+
+
 def sweep_run_id(jobs: list[Job]) -> str:
     """Deterministic run identity for one sweep: the sorted `sim_key` set
     plus the revision triple, hashed to 12 hex chars.
@@ -201,6 +235,12 @@ class SweepReport:
     pool_recycles: int = 0
     tmp_files_removed: int = 0
     wall_s: float = 0.0
+    tier: str = "engine"           # which tier actually ran ("engine" |
+                                   # "analytic" | "hybrid"; a degraded
+                                   # analytic/hybrid sweep reports "engine")
+    analytic_points: int = 0       # jobs priced by the analytical fast tier
+    frontier_confirmed: int = 0    # hybrid: frontier jobs engine-confirmed
+    frontier_jobs: list[str] = field(default_factory=list)  # their labels
 
     @property
     def ok(self) -> bool:
@@ -628,7 +668,10 @@ class SimRunner:
                  disk_cache: bool = True,
                  cache_dir: pathlib.Path | None = None,
                  sweep: SweepConfig | None = None,
-                 batch: bool | None = None) -> None:
+                 batch: bool | None = None,
+                 tier: str = "engine") -> None:
+        if tier not in TIERS:
+            raise ValueError(f"unknown tier {tier!r}; expected one of {TIERS}")
         self.processes = processes if processes is not None else default_processes()
         self.disk_cache = disk_cache
         self.cache_dir = pathlib.Path(cache_dir) if cache_dir else SIMCACHE
@@ -638,6 +681,15 @@ class SimRunner:
         # REPRO_SIM_BATCH env var ("1"/"0"), else auto — batch large
         # cache-miss sweeps when there is no process pool to lean on.
         self.batch = batch
+        # Default tier for `prefill` (a per-call override wins).  The
+        # analytical tier has its own memo + disk keys (`analytic_sim_key`)
+        # so estimates can never shadow engine results.
+        self.tier = tier
+        self._analytic_memo: dict[Job, AnalyticResult] = {}
+        self._calibration: Calibration | None = None
+        self._calib_degraded = False
+        self._calib_failure: FailureRecord | None = None
+        self._calib_reported = False
         self._memo: dict[Job, SimResult] = {}
         self.failures: dict[Job, FailureRecord] = {}
         # Operational telemetry (repro.obs.metrics): counters/histograms
@@ -647,7 +699,9 @@ class SimRunner:
         self.last_run_id = ""
         self.stats = {"memo_hits": 0, "disk_hits": 0, "computed": 0,
                       "batched": 0, "retried": 0, "failed": 0,
-                      "quarantined": 0, "pool_recycles": 0, "tmp_gc": 0}
+                      "quarantined": 0, "pool_recycles": 0, "tmp_gc": 0,
+                      "analytic_memo_hits": 0, "analytic_disk_hits": 0,
+                      "analytic_computed": 0, "calib_degraded": 0}
         if self.disk_cache:
             # sweep startup garbage-collects tmp files leaked by writers
             # that crashed mid-publish
@@ -702,6 +756,71 @@ class SimRunner:
                                  "memo/disk cache misses").inc()
         return res
 
+    # -- analytical fast tier ----------------------------------------------
+    def calibration(self) -> Calibration:
+        """The calibration the analytical tier prices with.
+
+        Loads ``<cache_dir>/analytic_calib.json`` once per runner; a missing
+        file falls back to the built-in fit, a *corrupt* file is quarantined
+        through the ResultStore machinery and flips the runner into degraded
+        mode (analytic/hybrid prefills run engine-only from then on)."""
+        if self._calibration is not None:
+            return self._calibration
+        path = self.store.path(CALIBRATION_KEY)
+        try:
+            calib = load_calibration(path) if self.disk_cache else None
+        except CalibrationError as e:
+            self.store.quarantine(CALIBRATION_KEY, f"calibration: {e}",
+                                  label=CALIBRATION_KEY)
+            self._sync_quarantines()
+            self._calib_degraded = True
+            self.stats["calib_degraded"] = 1
+            self._calib_failure = self.store.quarantines[-1]
+            calib = None
+        self._calibration = calib or DEFAULT_CALIBRATION
+        return self._calibration
+
+    def _analytic_key(self, job: Job) -> str:
+        return analytic_sim_key(*job, self.calibration())
+
+    def estimate(self, workload, cfg: SimConfig) -> AnalyticResult:
+        """One analytical estimate through its own memo/disk cache.
+
+        Estimates are keyed by `analytic_sim_key` (tagged with
+        `ANALYTIC_REV`/`CALIB_REV` and the calibration fingerprint), so they
+        can never collide with engine `sim_key` entries."""
+        name = workload if isinstance(workload, str) else workload.name
+        job = (name, cfg)
+        res = self._analytic_memo.get(job)
+        if res is not None:
+            self.stats["analytic_memo_hits"] += 1
+            return res
+        key = self._analytic_key(job)
+        if self.disk_cache:
+            payload = self.store.load(key, label="analytic:" + job_label(job))
+            if payload is not None:
+                payload.pop("ipc", None)   # derived, re-exposed as a property
+                try:
+                    res = AnalyticResult(**payload)
+                except TypeError as e:
+                    self.store.quarantine(
+                        key, f"analytic payload schema mismatch ({e})",
+                        label="analytic:" + job_label(job))
+                    self._sync_quarantines()
+                    res = None
+                else:
+                    self.stats["analytic_disk_hits"] += 1
+                    self._analytic_memo[job] = res
+                    return res
+        res = analytic_estimate(get_workload(name), cfg,
+                                calib=self.calibration())
+        self.stats["analytic_computed"] += 1
+        self._analytic_memo[job] = res
+        if self.disk_cache:
+            self.store.store(key, res.to_dict(),
+                             label="analytic:" + job_label(job))
+        return res
+
     # -- public API --------------------------------------------------------
     def sim(self, workload, cfg: SimConfig) -> SimResult:
         """One simulation through the memo/disk cache (inline on miss)."""
@@ -740,15 +859,50 @@ class SimRunner:
         disk cache (and the pool, if several SMs miss), then aggregate."""
         name = workload if isinstance(workload, str) else workload.name
         jobs = [(name, c) for c in per_sm_configs(cfg)]
-        self.prefill(jobs)
+        self.prefill(jobs, tier="engine")   # aggregation needs real results
         return aggregate(cfg, [self.sim(*job) for job in jobs], name)
 
     def prefill_gpu(self, jobs: list[Job]) -> SweepReport:
         """Expand whole-GPU jobs into their per-SM jobs and prefill those."""
         return self.prefill([(name, c) for name, cfg in jobs
-                             for c in per_sm_configs(cfg)])
+                             for c in per_sm_configs(cfg)], tier="engine")
 
-    def prefill(self, jobs: list[Job]) -> SweepReport:
+    def prefill(self, jobs: list[Job], tier: str | None = None,
+                top_k: int = DEFAULT_TOP_K) -> SweepReport:
+        """Execute a sweep at the requested tier (default: the runner's).
+
+        * ``"engine"`` — classic path: every cache-missing job is
+          cycle-accurately simulated across the process pool.
+        * ``"analytic"`` — every supported job is priced by the closed-form
+          model in `repro.sim.analytic` (microseconds/point, own cache
+          keys); unsupported jobs fall through to the engine.
+        * ``"hybrid"`` — analytic screening pass, then the per-workload
+          Pareto frontier (est. cycles × est. MRF accesses) plus the
+          ``top_k`` best-cycle points are *confirmed* by the engine, so
+          every frontier verdict is a real `SimResult`.
+
+        A corrupt calibration file degrades analytic/hybrid to engine-only
+        (the quarantine is attached to the report).  Never raises on job
+        failure: check ``report.ok``."""
+        tier = tier or self.tier
+        if tier not in TIERS:
+            raise ValueError(f"unknown tier {tier!r}; expected one of {TIERS}")
+        if tier != "engine":
+            self.calibration()          # may flip the degraded flag
+            if self._calib_degraded:
+                report = self._prefill_engine(jobs)
+                report.tier = "engine"
+                if not self._calib_reported and self._calib_failure:
+                    report.quarantined.insert(0, self._calib_failure)
+                    self._calib_reported = True
+                return report
+        if tier == "analytic":
+            return self._prefill_analytic(jobs)
+        if tier == "hybrid":
+            return self._prefill_hybrid(jobs, top_k=top_k)
+        return self._prefill_engine(jobs)
+
+    def _prefill_engine(self, jobs: list[Job]) -> SweepReport:
         """Execute all cache-missing jobs across the process pool.
 
         Never raises on job failure: faults are retried/recorded per
@@ -806,6 +960,113 @@ class SimRunner:
                   "process-pool teardowns").inc(report.pool_recycles)
         m.counter("sweep_quarantined_total",
                   "cache entries quarantined").inc(len(report.quarantined))
+        return report
+
+    def _split_supported(self, jobs: list[Job]) -> tuple[list[Job], list[Job]]:
+        """Dedup, then split into (analytic-supported, engine-only) jobs."""
+        seen: set[Job] = set()
+        supported: list[Job] = []
+        engine_only: list[Job] = []
+        for job in jobs:
+            if job in seen:
+                continue
+            seen.add(job)
+            (supported if analytic_supported(job[1]) else engine_only).append(job)
+        return supported, engine_only
+
+    @staticmethod
+    def _merge_nested(report: SweepReport, nested: SweepReport,
+                      count_jobs: bool = True) -> None:
+        """Fold an engine sub-sweep's outcomes into a tiered report.
+
+        ``count_jobs=False`` merges only the engine *activity* (cache hits,
+        compute, retries, faults) — used for hybrid confirmation sweeps,
+        whose jobs were already counted once as analytic estimates."""
+        if count_jobs:
+            report.total += nested.total
+            report.completed += nested.completed
+        report.cached += nested.cached
+        report.computed += nested.computed
+        for label, n in nested.retried.items():
+            report.retried[label] = report.retried.get(label, 0) + n
+        report.retry_kinds.update(nested.retry_kinds)
+        report.failed.extend(nested.failed)
+        report.quarantined.extend(nested.quarantined)
+        report.pool_recycles += nested.pool_recycles
+
+    def _estimate_jobs(self, jobs: list[Job],
+                       report: SweepReport) -> dict[Job, AnalyticResult]:
+        """Price `jobs` analytically; failures degrade per-job, like
+        `try_sim` — a structured FailureRecord, not a crashed sweep."""
+        q_before = len(self.store.quarantines)
+        out: dict[Job, AnalyticResult] = {}
+        for job in jobs:
+            try:
+                out[job] = self.estimate(*job)
+            except Exception as e:  # noqa: BLE001 - degrade, don't crash
+                report.failed.append(FailureRecord(
+                    job=job_label(job), workload=job[0], design=job[1].design,
+                    kind="transient",
+                    detail=f"analytic {type(e).__name__}: {e}", attempts=1,
+                    key=self._analytic_key(job)))
+        report.quarantined.extend(self.store.quarantines[q_before:])
+        report.analytic_points = len(out)
+        report.completed += len(out)
+        return out
+
+    def _prefill_analytic(self, jobs: list[Job]) -> SweepReport:
+        """Screen every supported job with the closed-form model; jobs the
+        model cannot price (multi-SM, unknown designs) go to the engine."""
+        t0 = time.time()
+        supported, engine_only = self._split_supported(jobs)
+        run_id = sweep_run_id(jobs)
+        self.last_run_id = self.store.run_id = run_id
+        report = SweepReport(run_id=run_id, total=len(supported),
+                             tier="analytic")
+        self._estimate_jobs(supported, report)
+        if engine_only:
+            self._merge_nested(report, self._prefill_engine(engine_only))
+        self.last_run_id = self.store.run_id = run_id
+        report.wall_s = round(time.time() - t0, 3)
+        return report
+
+    def _prefill_hybrid(self, jobs: list[Job],
+                        top_k: int = DEFAULT_TOP_K) -> SweepReport:
+        """Analytic screening, engine confirmation of the interesting points.
+
+        Per workload, the engine confirms the analytic Pareto frontier over
+        (estimated cycles, estimated MRF accesses) plus the `top_k` lowest
+        estimated-cycle points; everything else keeps its fast estimate.
+        Confirmed results come from `_prefill_engine`, i.e. the ordinary
+        cache/retry machinery — `sim()` replays them bit-identically."""
+        t0 = time.time()
+        supported, engine_only = self._split_supported(jobs)
+        run_id = sweep_run_id(jobs)
+        self.last_run_id = self.store.run_id = run_id
+        report = SweepReport(run_id=run_id, total=len(supported),
+                             tier="hybrid")
+        ests = self._estimate_jobs(supported, report)
+        by_workload: dict[str, list[Job]] = {}
+        for job in ests:
+            by_workload.setdefault(job[0], []).append(job)
+        confirm: list[Job] = []
+        for group in by_workload.values():
+            pts = [(float(ests[j].cycles), float(ests[j].est_mrf_accesses))
+                   for j in group]
+            picked = set(pareto_frontier(pts))
+            for i in sorted(range(len(group)), key=lambda i: pts[i][0])[:top_k]:
+                picked.add(i)
+            confirm.extend(group[i] for i in sorted(picked))
+        if confirm:
+            nested = self._prefill_engine(confirm)
+            self._merge_nested(report, nested, count_jobs=False)
+            report.frontier_jobs = sorted(job_label(j) for j in confirm)
+            report.frontier_confirmed = sum(
+                1 for j in confirm if self._lookup(j) is not None)
+        if engine_only:
+            self._merge_nested(report, self._prefill_engine(engine_only))
+        self.last_run_id = self.store.run_id = run_id
+        report.wall_s = round(time.time() - t0, 3)
         return report
 
     def metrics_snapshot(self) -> dict:

@@ -10,6 +10,12 @@ from .gpu import GpuResult, simulate_gpu
 from .batch import (
     BATCH_REV, batch_supported, run_batch, simulate_batch, simulate_one,
 )
+from .analytic import (
+    ANALYTIC_REV, CALIB_REV, TIERS, AnalyticModelError, AnalyticResult,
+    Calibration, CalibrationError, analytic_supported, estimate,
+    fit_calibration, load_calibration, pareto_frontier, save_calibration,
+    spearman_rho,
+)
 
 __all__ = [
     "SimBudgetExceeded",
@@ -20,4 +26,8 @@ __all__ = [
     "simulate_one",
     "TABLE2", "baseline_config", "design_config", "max_tolerable_latency",
     "normalized_ipc", "run",
+    "ANALYTIC_REV", "CALIB_REV", "TIERS", "AnalyticModelError",
+    "AnalyticResult", "Calibration", "CalibrationError",
+    "analytic_supported", "estimate", "fit_calibration", "load_calibration",
+    "pareto_frontier", "save_calibration", "spearman_rho",
 ]

@@ -32,7 +32,8 @@ MARKDOWN_FILES = sorted([ROOT / "README.md", *DOCS.glob("*.md")])
 
 def test_docs_tree_exists():
     for name in ("architecture.md", "simulator.md", "configuration.md",
-                 "compiler.md", "serving.md", "observability.md"):
+                 "compiler.md", "serving.md", "observability.md",
+                 "analytical.md"):
         assert (DOCS / name).is_file(), f"docs/{name} missing"
 
 
@@ -132,7 +133,7 @@ def test_markdown_relative_links_resolve(md):
 def test_docs_are_linked_from_readme():
     readme = (ROOT / "README.md").read_text()
     for name in ("architecture.md", "simulator.md", "configuration.md",
-                 "serving.md", "observability.md"):
+                 "serving.md", "observability.md", "analytical.md"):
         assert f"docs/{name}" in readme, f"README does not index docs/{name}"
 
 
@@ -156,6 +157,39 @@ def test_observability_doc_names_every_category_and_metric():
     # the configuration reference must cover the new knob and counter too
     cfg_doc = CONFIG_DOC.read_text()
     assert "`trace`" in cfg_doc and "`cycle_breakdown`" in cfg_doc
+
+
+def test_analytical_doc_names_the_model_surface():
+    """docs/analytical.md documents the fast tier's full public surface —
+    every tier name, every calibration coefficient, the pinned pass-stats
+    schema, the CLI workflows, and the accuracy gates — so a model change
+    cannot land undocumented."""
+    from repro.sim.analytic import ANALYTIC_PASS_SCHEMA, Calibration, TIERS
+
+    doc = (DOCS / "analytical.md").read_text()
+    for tier in TIERS:
+        assert f"`{tier}`" in doc, f"tier {tier!r} undocumented"
+    for f in dataclasses.fields(Calibration):
+        assert f"`{f.name}`" in doc or f.name in doc, \
+            f"Calibration field {f.name!r} undocumented"
+    for name in ANALYTIC_PASS_SCHEMA:
+        assert f"`{name}`" in doc, f"consumed pass {name!r} undocumented"
+    for name in ("AnalyticResult", "analytic_supported", "fit_calibration",
+                 "ANALYTIC_REV", "CALIB_REV", "ANALYTIC_PASS_SCHEMA",
+                 "check_pass_stats", "pass_stats", "CompiledPlan",
+                 "screening_jobs", "analytic_calib", "est_mrf_accesses",
+                 "--fit-calibration", "--analytic-smoke",
+                 "BENCH_analytic_smoke.json", "analytic_tier",
+                 "scheduler_idle"):
+        assert name in doc, f"{name} undocumented in analytical.md"
+    # the trust gates are stated in the doc with their pinned thresholds
+    for gate in ("0.9", "100x", "1.0"):
+        assert gate in doc, f"accuracy gate {gate} missing from analytical.md"
+    # and the sibling references exist
+    cfg_doc = CONFIG_DOC.read_text()
+    assert "`tier`" in cfg_doc or "tier" in cfg_doc
+    assert "analytical.md" in cfg_doc
+    assert "analytical.md" in (DOCS / "serving.md").read_text()
 
 
 def test_serving_doc_names_every_sweep_knob():

@@ -400,6 +400,99 @@ def test_failure_kinds_are_closed():
     assert rec.to_dict()["kind"] == "crash"
 
 
+# ------------------------------------------------------------ sweep tiers
+
+def test_analytic_tier_never_pollutes_engine_cache(tmp_path):
+    """ISSUE-9: analytic estimates are keyed by `ANALYTIC_REV`/`CALIB_REV`
+    under distinct "an"-prefixed keys, so an engine sweep over the same
+    cache directory can never be served a closed-form estimate."""
+    jobs = _jobs(seeds=1)
+    cache = tmp_path / "cache"
+    runner = SimRunner(processes=1, cache_dir=cache, tier="analytic")
+    rep = runner.prefill(jobs)
+    assert rep.ok and rep.tier == "analytic"
+    assert rep.analytic_points == rep.completed == rep.total == len(jobs)
+    for job in jobs:
+        akey = runner._analytic_key(job)
+        assert akey.startswith("an") and akey != sim_key(*job)
+        assert (cache / f"{akey}.json").exists()
+        assert not (cache / f"{sim_key(*job)}.json").exists()
+    # a later engine sweep finds nothing reusable: every job is computed
+    engine = SimRunner(processes=1, cache_dir=cache)
+    rep2 = engine.prefill(jobs)
+    assert rep2.tier == "engine"
+    assert rep2.computed == len(jobs) and rep2.cached == 0
+    for name, cfg in jobs:
+        assert engine.sim(name, cfg) == simulate(WORKLOADS[name], cfg)
+
+
+def test_analytic_rev_keys_estimate_cache(tmp_path, monkeypatch):
+    jobs = _jobs(seeds=1)
+    cache = tmp_path / "cache"
+    SimRunner(processes=1, cache_dir=cache, tier="analytic").prefill(jobs)
+    warm = SimRunner(processes=1, cache_dir=cache, tier="analytic")
+    warm.prefill(jobs)
+    assert warm.stats["analytic_disk_hits"] == len(jobs)
+    assert warm.stats["analytic_computed"] == 0
+    monkeypatch.setattr(sweep_mod, "ANALYTIC_REV", sweep_mod.ANALYTIC_REV + 1)
+    bumped = SimRunner(processes=1, cache_dir=cache, tier="analytic")
+    bumped.prefill(jobs)
+    assert bumped.stats["analytic_computed"] == len(jobs)
+
+
+def test_hybrid_degrades_to_engine_on_corrupt_calibration(tmp_path):
+    """A torn calibration file must not poison the sweep: the hybrid tier
+    quarantines it through the standard corrupt-entry path and falls back
+    to a full engine sweep, reporting the degradation exactly once."""
+    jobs = _jobs(seeds=1)
+    cache = tmp_path / "cache"
+    runner = SimRunner(processes=1, cache_dir=cache, tier="hybrid")
+    calib_path = runner.store.path(sweep_mod.CALIBRATION_KEY)
+    calib_path.parent.mkdir(parents=True, exist_ok=True)
+    calib_path.write_text('{"torn":')
+    rep = runner.prefill(jobs)
+    assert rep.tier == "engine" and rep.ok
+    assert rep.completed == rep.total == len(jobs)
+    assert rep.analytic_points == 0 and rep.frontier_jobs == []
+    assert runner.stats["calib_degraded"] == 1
+    # the corrupt file went through the shared quarantine machinery
+    assert not calib_path.exists()
+    qdir = cache / "quarantine"
+    assert (qdir / "analytic_calib.json").exists()
+    assert (qdir / "analytic_calib.failure.json").exists()
+    recs = [q for q in rep.quarantined
+            if q.key == sweep_mod.CALIBRATION_KEY]
+    assert len(recs) == 1 and recs[0].kind == "corrupt"
+    assert "calibration" in recs[0].detail
+    # degradation is reported once, not re-surfaced on every later sweep
+    rep2 = runner.prefill(jobs, tier="hybrid")
+    assert rep2.tier == "engine" and rep2.ok
+    assert all(q.key != sweep_mod.CALIBRATION_KEY for q in rep2.quarantined)
+    # the fallback results themselves are exact
+    for name, cfg in jobs:
+        assert runner.sim(name, cfg) == simulate(WORKLOADS[name], cfg)
+
+
+def test_report_tier_stat_survives_chaos(tmp_path, monkeypatch):
+    """`SweepReport.tier` rides along the chaos machinery: a transient fault
+    inside the hybrid confirmation sweep is retried and the report still
+    identifies the tier that ran (and serializes it)."""
+    label = "kmeans/LTRF/seed0"
+    _arm(tmp_path, monkeypatch,
+         [{"match": label, "action": "raise", "times": 1}])
+    runner = SimRunner(processes=1, cache_dir=tmp_path / "cache",
+                       sweep=FAST, tier="hybrid")
+    jobs = _jobs(seeds=1)
+    rep = runner.prefill(jobs)
+    assert rep.ok and rep.tier == "hybrid"
+    assert rep.analytic_points == len(jobs)
+    assert rep.retried == {label: 1}
+    assert rep.to_dict()["tier"] == "hybrid"
+    # the default (engine) path reports its tier too
+    eng = SimRunner(processes=1, cache_dir=tmp_path / "cache2", sweep=FAST)
+    assert eng.prefill(jobs).to_dict()["tier"] == "engine"
+
+
 def test_faults_disabled_results_bit_identical(tmp_path, monkeypatch):
     """With no fault plan, the service path must be invisible: pool prefill
     == serial prefill == direct simulate, and stats stay hit-clean."""
