@@ -96,7 +96,7 @@ from benchmarks.orchestrator import SimRunner, default_processes
 from benchmarks.sweep_subset import (
     BREAKDOWN_DESIGNS, INTERVAL_SWEEP_CAP, INTERVAL_VERDICT_DESIGN,
     SWEEP_DESIGNS, bank_sweep_jobs, breakdown_sweep_jobs, gpu_sweep_jobs,
-    interval_sweep_jobs, screening_jobs, sweep_jobs,
+    interval_sweep_jobs, run_tier_sweep, screening_jobs, sweep_jobs,
 )
 from repro.workloads import get_workload
 
@@ -126,7 +126,10 @@ def host_facts(effective_processes: int) -> dict:
 
 
 def measure_fast_path(jobs, processes=None) -> dict:
-    runner = SimRunner(processes=processes, disk_cache=False)
+    # batch=False pins the event-heap engine: this measurement is the A/B
+    # *reference* for `measure_batch_engine`, so the sweep service's CPU
+    # auto-batch policy must never silently fold batch throughput into it
+    runner = SimRunner(processes=processes, disk_cache=False, batch=False)
     t0 = time.time()
     sweep_report = runner.prefill(jobs)
     wall = time.time() - t0
@@ -180,24 +183,32 @@ def measure_batch_engine(jobs, reference=None,
     the bit-identity verdict; a single diverging counter fails it.
 
     The 10x speedup target assumes a backend that can actually execute the
-    lockstep tick in parallel (GPU/TPU, or XLA CPU with many cores).  On a
-    serial 1-CPU host the engine is bound by per-op dispatch overhead
-    (~60 scatter ops per simulated tick) and the event-heap engine wins —
-    the verdict says so explicitly instead of letting a sub-1x ratio sit
-    unexplained next to a stale multi-core baseline."""
+    lockstep tick in parallel (GPU/TPU, or XLA CPU with many cores).  The
+    BATCH_REV 2 fused tick (struct-of-arrays families + the legacy XLA:CPU
+    runtime) lifted the serial-CPU floor past the event heap, so the
+    verdict is measured, not presumed — and ``wall_s`` no longer folds XLA
+    compilation into throughput: ``compile_s`` (one-time, persisted by the
+    XLA compile cache across runs) and steady-state ``run_s`` are split
+    out, with ``sim_instr_per_s`` computed from the steady state and the
+    compile-inclusive ratio reported alongside."""
     from repro.sim import SimBudgetExceeded
-    from repro.sim.batch import BATCH_REV, batch_supported, run_batch
+    from repro.sim.batch import (BATCH_REV, batch_supported, reset_run_stats,
+                                 run_batch)
 
     uniq = list(dict.fromkeys(jobs))
     supported = [j for j in uniq if batch_supported(j[1])]
+    stats = reset_run_stats()
     t0 = time.time()
     outs = run_batch([(get_workload(n), cfg) for n, cfg in supported],
                      fallback=False)
     wall = time.time() - t0
+    compile_s, run_s = stats["compile_s"], stats["run_s"]
+    ticks = stats["ticks"]
     by_job = dict(zip(supported, outs))
     total_instr = sum(by_job[j].instructions for j in jobs if j in by_job
                       and not isinstance(by_job[j], SimBudgetExceeded))
-    per_s = total_instr / max(wall, 1e-9)
+    per_s = total_instr / max(run_s, 1e-9)            # steady state
+    per_s_incl = total_instr / max(wall, 1e-9)        # compile included
     bit_identical = None
     if reference is not None:
         bit_identical = all(by_job[j] == reference[j] for j in supported)
@@ -210,10 +221,14 @@ def measure_batch_engine(jobs, reference=None,
     host["jax_platform"] = platform
     speedup = (round(per_s / event_instr_per_s, 3)
                if event_instr_per_s else None)
+    speedup_incl = (round(per_s_incl / event_instr_per_s, 3)
+                    if event_instr_per_s else None)
     if speedup is None:
         verdict = "no_event_heap_reference"
     elif speedup >= 10:
         verdict = "meets_10x_target"
+    elif speedup >= 1:
+        verdict = "beats_event_heap_below_10x"
     elif platform == "cpu" and (os.cpu_count() or 1) <= 2:
         verdict = "below_target_dispatch_bound_serial_host"
     else:
@@ -225,11 +240,16 @@ def measure_batch_engine(jobs, reference=None,
         "sims": len(supported),
         "unsupported_sims": len(uniq) - len(supported),
         "wall_s": round(wall, 2),
+        "compile_s": round(compile_s, 2),
+        "run_s": round(run_s, 2),
+        "fused_loop_ticks": ticks,
         "sim_instructions": total_instr,
         "sim_instr_per_s": round(per_s, 1),
+        "sim_instr_per_s_incl_compile": round(per_s_incl, 1),
         "bit_identical_to_event_heap": bit_identical,
         "event_heap_sim_instr_per_s": event_instr_per_s,
         "speedup_vs_event_heap": speedup,
+        "speedup_vs_event_heap_incl_compile": speedup_incl,
         "meets_10x_target": bool(speedup is not None and speedup >= 10),
         "verdict": verdict,
     }
@@ -249,15 +269,15 @@ def measure_batch_smoke(out_path: pathlib.Path = BATCH_SMOKE_OUT_PATH) -> dict:
     ratio land in ``BENCH_batch_smoke.json`` (uploaded as a CI artifact).
 
     Bit-identity always gates the exit code.  The speedup >= 1 verdict is
-    enforced only where it is physically meaningful — when jax has a
-    non-CPU backend or the host has enough cores for XLA to parallelize
-    the lockstep tick; on a serial CPU host it is recorded as
-    ``not_enforced_serial_cpu_host`` instead of institutionalizing a red
-    CI step (or worse, a fudged number) on small runners."""
+    computed on the *steady-state* batch wall (XLA compile split out as
+    ``batch_compile_s`` — it is a one-time cost amortized by the
+    persistent compile cache) and, since the BATCH_REV 2 fused tick beat
+    the event heap on the tracked serial-CPU host (see ``batch_engine``
+    in BENCH_sim.json), it is enforced on serial CPU hosts too."""
     from dataclasses import replace as _replace
 
     from repro.sim import SimBudgetExceeded, design_config, simulate
-    from repro.sim.batch import run_batch
+    from repro.sim.batch import reset_run_stats, run_batch
 
     jobs = []
     for wname in SMOKE_WORKLOADS:
@@ -266,9 +286,11 @@ def measure_batch_smoke(out_path: pathlib.Path = BATCH_SMOKE_OUT_PATH) -> dict:
                 jobs.append((wname, design_config(design, table2_config=7,
                                                   num_warps=nw)))
     pairs = [(get_workload(n), cfg) for n, cfg in jobs]
+    stats = reset_run_stats()
     t0 = time.time()
     outs = run_batch(pairs, fallback=False)
     batch_wall = time.time() - t0
+    batch_compile_s, batch_run_s = stats["compile_s"], stats["run_s"]
     t0 = time.time()
     ref = [simulate(w, cfg) for w, cfg in pairs]
     event_wall = time.time() - t0
@@ -283,31 +305,32 @@ def measure_batch_smoke(out_path: pathlib.Path = BATCH_SMOKE_OUT_PATH) -> dict:
         wd_event = None
     except SimBudgetExceeded as e:
         wd_event = e
-    speedup = round((total_instr / max(batch_wall, 1e-9))
-                    / (total_instr / max(event_wall, 1e-9)), 3)
+    speedup = round(max(event_wall, 1e-9) / max(batch_run_s, 1e-9), 3)
+    speedup_incl = round(max(event_wall, 1e-9) / max(batch_wall, 1e-9), 3)
     try:
         import jax
         platform = jax.devices()[0].platform
     except Exception:  # noqa: BLE001
         platform = "unavailable"
-    enforce_speedup = platform != "cpu" or (os.cpu_count() or 1) >= 8
     verdicts = {
         "batch_bit_identical": outs == ref,
         "watchdog_budget_parity": (
             isinstance(wd_batch, SimBudgetExceeded)
             and wd_event is not None
             and wd_batch.args == wd_event.args),
-        "speedup_ge_1": (speedup >= 1.0 if enforce_speedup
-                         else "not_enforced_serial_cpu_host"),
+        "speedup_ge_1": speedup >= 1.0,
     }
     gating = {k: v for k, v in verdicts.items() if isinstance(v, bool)}
     report = {
         "sims": len(jobs),
         "host": {**host_facts(1), "jax_platform": platform},
         "batch_wall_s": round(batch_wall, 2),
+        "batch_compile_s": round(batch_compile_s, 2),
+        "batch_run_s": round(batch_run_s, 2),
         "event_heap_wall_s": round(event_wall, 2),
         "sim_instructions": total_instr,
         "speedup_vs_event_heap": speedup,
+        "speedup_vs_event_heap_incl_compile": speedup_incl,
         "verdicts": verdicts,
         "all_verdicts_pass": all(gating.values()),
     }
@@ -483,6 +506,78 @@ def measure_analytic_smoke(
     report = measure_analytic_tier(jobs, processes=1)
     report["sweep"] = (f"analytic_smoke({len(ANALYTIC_SMOKE_WORKLOADS)} "
                        "workloads x 7 designs + baselines, tc7)")
+    out_path.write_text(json.dumps(report, indent=1) + "\n")
+    print(f"# wrote {out_path}", file=sys.stderr)
+    return report
+
+
+SCREENING_SMOKE_OUT_PATH = ROOT / "BENCH_screening_smoke.json"
+# Trust gates for the screening-scale hybrid run (ROADMAP item 1's
+# "actually run the screening grid"): the whole 3.7k-point grid must be
+# priced, every point the hybrid tier selects for confirmation must come
+# back engine-confirmed, and the end-to-end sweep must stay inside a
+# wall-clock budget a nightly CI lane can afford.
+SCREENING_MIN_POINTS = 3500       # the tracked grid is 3752 unique points
+SCREENING_MIN_CONFIRMED = 42      # >= top_k per workload group (14 x 3)
+SCREENING_MAX_WALL_S = 1800.0
+
+
+def measure_screening(processes=None, top_k: int = 3) -> dict:
+    """Run the 3752-point ``sweep_subset.screening_jobs`` grid through the
+    hybrid tier (BENCH_sim.json's ``analytic_screening`` section; CI's
+    ``--screening-smoke`` step).
+
+    This is the screening workload the analytical tier exists for: every
+    grid point is priced by the closed-form model, the estimated Pareto
+    frontier (plus the ``top_k`` best-cycle points per workload) is
+    confirmed by the cycle-accurate engine through the ordinary sweep
+    machinery, and the verdicts assert the confirmation counts and the
+    wall-clock budget — a grid ~19x the tracked engine sweep, completed in
+    a fraction of its wall."""
+    from repro.sim.analytic import analytic_supported
+
+    jobs = list(dict.fromkeys(screening_jobs()))
+    supported = [j for j in jobs if analytic_supported(j[1])]
+    runner = SimRunner(processes=processes, disk_cache=False)
+    t0 = time.time()
+    runner, report = run_tier_sweep(jobs, "hybrid", runner=runner,
+                                    top_k=top_k)
+    wall = time.time() - t0
+    n_frontier = len(report.frontier_jobs)
+    verdicts = {
+        "grid_at_screening_scale": len(jobs) >= SCREENING_MIN_POINTS,
+        "all_points_screened": report.ok
+            and report.analytic_points == len(supported),
+        "frontier_all_confirmed": n_frontier >= SCREENING_MIN_CONFIRMED
+            and report.frontier_confirmed == n_frontier,
+        "wall_within_budget": wall <= SCREENING_MAX_WALL_S,
+    }
+    return {
+        "sweep": "screening_jobs(rf 256/2048KB x tolerance mults x "
+                 "two_level/gto x 7 designs x 14 workloads)",
+        "tier": "hybrid",
+        "host": host_facts(runner.processes),
+        "points": len(jobs),
+        "analytic_supported": len(supported),
+        "analytic_points": report.analytic_points,
+        "frontier_selected": n_frontier,
+        "frontier_confirmed": report.frontier_confirmed,
+        "wall_s": round(wall, 2),
+        "points_per_s": round(len(jobs) / max(wall, 1e-9), 1),
+        "sweep_report": report.to_dict(),
+        "thresholds": {"min_points": SCREENING_MIN_POINTS,
+                       "min_confirmed": SCREENING_MIN_CONFIRMED,
+                       "max_wall_s": SCREENING_MAX_WALL_S},
+        "verdicts": verdicts,
+        "all_verdicts_pass": all(verdicts.values()),
+    }
+
+
+def measure_screening_smoke(
+        out_path: pathlib.Path = SCREENING_SMOKE_OUT_PATH) -> dict:
+    """CI's ``--screening-smoke``: the full screening grid + trust gates,
+    written to ``BENCH_screening_smoke.json`` (uploaded as an artifact)."""
+    report = measure_screening(processes=1)
     out_path.write_text(json.dumps(report, indent=1) + "\n")
     print(f"# wrote {out_path}", file=sys.stderr)
     return report
@@ -879,6 +974,7 @@ def run_bench(smoke: bool = False, processes: int | None = None,
             jobs, engine_results=reference,
             engine_instr_per_s=report["sim_instr_per_s"],
             processes=processes)
+        report["analytic_screening"] = measure_screening(processes=processes)
         report["gpu_sweep"] = measure_gpu_sweep(processes=processes)
         report["bank_sweep"] = measure_bank_sweep(processes=processes,
                                                   suite=suite)
@@ -947,6 +1043,14 @@ def main(argv=None) -> None:
                          "throughput gate; writes BENCH_analytic_smoke.json "
                          "and exits non-zero on any failed verdict (CI "
                          "analytic smoke)")
+    ap.add_argument("--screening-smoke", action="store_true",
+                    help="run the full 3752-point screening grid through "
+                         "the hybrid tier: every point priced by the "
+                         "analytical model, the estimated frontier "
+                         "engine-confirmed, counts + wall-clock asserted; "
+                         "writes BENCH_screening_smoke.json and exits "
+                         "non-zero on any failed verdict (CI screening "
+                         "smoke)")
     ap.add_argument("--chaos-smoke", action="store_true",
                     help="run a small sweep under injected faults (crash + "
                          "hang + transient + corrupt cache entry) and "
@@ -1007,6 +1111,14 @@ def main(argv=None) -> None:
         if not report["all_verdicts_pass"]:
             failed = [k for k, v in report["verdicts"].items() if not v]
             print(f"# analytic smoke FAILED: {failed}", file=sys.stderr)
+            sys.exit(1)
+        return
+    if args.screening_smoke:
+        report = measure_screening_smoke()
+        print(json.dumps(report, indent=1))
+        if not report["all_verdicts_pass"]:
+            failed = [k for k, v in report["verdicts"].items() if not v]
+            print(f"# screening smoke FAILED: {failed}", file=sys.stderr)
             sys.exit(1)
         return
     if args.chaos_smoke:

@@ -75,26 +75,40 @@ Job = tuple[str, SimConfig]
 # has this many supported misses: below that, jit compilation costs more
 # than it saves and per-job latency histograms lose their meaning.
 # Explicit opt-in (batch=True or REPRO_SIM_BATCH=1) batches everything it
-# can.
+# can.  On parallel backends (GPU/TPU) the bar is low; on CPU the BATCH_REV
+# 2 fused tick beats the event-heap engine in *steady state* (measured:
+# `batch_engine` in BENCH_sim.json), but a cold prefill still pays tens of
+# seconds of XLA compilation per shape bucket, so the CPU bar is set where
+# a tracked-sweep-sized prefill amortizes it and a smoke-sized one never
+# triggers it.
 _MIN_AUTO_BATCH = 8
+_MIN_AUTO_BATCH_CPU = 64
 
 
-def _auto_batch_ok() -> bool:
-    """True when jax is already loaded with a non-CPU backend.
+def _auto_batch_threshold() -> int:
+    """Supported-miss count at which 'auto' mode engages the batch engine.
 
-    Deliberately refuses to *import* jax: a cache probe should not cost a
-    multi-second import, and if nothing else in the process needed jax the
-    host is almost certainly a plain CPU box where batching loses anyway
-    (see `SimRunner._batch_mode`)."""
+    Deliberately refuses to *import* jax for the probe: a cache lookup
+    should not cost a multi-second import.  If jax is already up on a
+    non-CPU backend the low bar applies; otherwise (plain CPU host, or jax
+    not loaded yet — `run_batch` imports it lazily only once the threshold
+    is actually met) the compile-amortizing CPU bar applies."""
     import sys
 
     j = sys.modules.get("jax")
-    if j is None:
-        return False
-    try:
-        return j.devices()[0].platform != "cpu"
-    except Exception:  # noqa: BLE001 - any probe failure means "no"
-        return False
+    if j is not None:
+        try:
+            if j.devices()[0].platform != "cpu":
+                return _MIN_AUTO_BATCH
+        except Exception:  # noqa: BLE001 - any probe failure means "cpu"
+            pass
+    return _MIN_AUTO_BATCH_CPU
+
+
+def _auto_batch_ok() -> bool:
+    """Back-compat shim: 'auto' mode now always consults
+    `_auto_batch_threshold` (CPU hosts batch too, at a higher bar)."""
+    return True
 
 # Failure/retry classification (FailureRecord.kind):
 #   transient - the job raised an ordinary exception (incl. injected faults)
@@ -926,9 +940,11 @@ class SimRunner:
         batch_states: list[_JobState] = []
         if misses:
             mode = self._batch_mode()
-            if mode == "on" or (mode == "auto" and _auto_batch_ok()):
+            if mode in ("on", "auto"):
                 misses, batch_states = self._prefill_batch(
-                    misses, min_jobs=_MIN_AUTO_BATCH if mode == "auto" else 1)
+                    misses,
+                    min_jobs=(_auto_batch_threshold() if mode == "auto"
+                              else 1))
             if misses:
                 if self.processes <= 1 or len(misses) == 1:
                     self._prefill_inline(misses, report)
@@ -1081,12 +1097,12 @@ class SimRunner:
         chaos harness targets the per-job classic paths (fault points,
         retries, pool recycles), which the vectorized engine bypasses.
 
-        'auto' engages the batch engine only when jax has a non-CPU
-        backend: on a serial CPU host the lockstep engine is bound by
-        per-op dispatch overhead (~60 scatter ops per simulated tick) and
-        measurably *loses* to the event-heap engine, so silently batching
-        there would re-introduce exactly the kind of misleading perf
-        behavior this ledger is supposed to expose."""
+        'auto' engages the batch engine above a platform-dependent
+        supported-miss threshold (`_auto_batch_threshold`): a low bar on
+        parallel backends, a compile-amortizing bar on CPU — where the
+        BATCH_REV 2 fused tick beats the event-heap engine in steady state
+        (the measured `batch_engine` verdict in BENCH_sim.json) but cold
+        XLA compilation still costs tens of seconds per shape bucket."""
         if faults.active_plan() is not None:
             return "off"
         if self.batch is True:

@@ -42,10 +42,41 @@ Why lockstep is exact: the scalar tick's sequential sub-loops collapse.
   ``popitem(last=False)``.
 * The collector / prefetch-slot min-heaps are argmin-replace on arrays
   (multiset equality with both the heap and golden's first-argmin scan).
+
+BATCH_REV 2 (fused tick): on XLA CPU every scatter/gather dispatch costs
+microseconds regardless of size, so REV 1's ~60 per-tick `.at[...]` updates
+and four full `(lane, slot, src)` readiness scans dominated the wall clock.
+REV 2 restructures the step around struct-of-arrays *families* and a
+per-warp readiness cache (the scalar engines' `_refresh_ready` memo,
+vectorized):
+
+* ``wf``  (K, W, 6+loops+dias) — status/pc/iv/ready_at/issued/mem_ops plus
+  the loop/diamond branch counters: one row gather + one row scatter per
+  selected warp instead of one dispatch per field.
+* ``rv``  (K, W, regs+preds, 2) — register/predicate ready-times and the
+  from-mem flag as one value plane; dst+pred writeback is a single scatter
+  (out-of-bounds indices drop masked writes, no read-modify-write).
+* ``cf``  (K, W, 2+S+PS) — cached max/mem-max/per-operand ready times of
+  each warp's *current* instruction, refreshed only when that warp's state
+  changes (its own issue or prefetch, exactly the scalar cache-invalidation
+  sites).  Scheduler scans and the event-horizon search become elementwise
+  reads of this plane — no per-slot 3D gathers.
+* ``rc``  (K, E, 2) — RFC (key, stamp) rows; the LRU move-to-end phase is
+  one scatter-max (stamps are monotone, so duplicate-key last-write ==
+  max), only the insert/evict phase stays a short sequential loop.
+* Active-list compaction is a cumsum + dropped-out-of-bounds scatter
+  instead of a stable argsort.
+
+Event-horizon time skipping (REV 1's ``delta`` jump) is unchanged: on a
+zero-issue tick every lane advances straight to its next event — the min
+over collector frees, warp wake-ups, and pending operand times, exactly
+the scalar `_next_event` — with the skipped cycles charged to the same
+`cycle_breakdown` category, so sum==cycles and bit-identity survive.
 """
 from __future__ import annotations
 
 import os
+import time
 from dataclasses import dataclass
 from typing import Sequence
 
@@ -64,7 +95,10 @@ from .engine import (
 
 # Bump with ENGINE_REV-style discipline if batch-engine behavior ever
 # intentionally diverges (it must not: bit-identity is the contract).
-BATCH_REV = 1
+# REV 2: fused-family tick (struct-of-arrays state, cached readiness
+# planes, one-scatter LRU hit phase, cumsum compaction) — bit-identical
+# to REV 1 by construction, ~O(families) dispatches per tick.
+BATCH_REV = 2
 
 # Opcode kinds in the flat-PC instruction encoding.
 _OP_OTHER, _OP_BRA, _OP_EXIT, _OP_SET, _OP_LD = range(5)
@@ -74,9 +108,56 @@ _GUARD = 8_000_000                # same wedge guard as the scalar engines
 
 _CAT_INDEX = {c: i for i, c in enumerate(CYCLE_CATEGORIES)}
 
+# warp-family (``wf``) fixed field columns; loop counters start at
+# _F_LC, diamond counters at _F_LC + n_loop_slots + 1 (chunk-dependent).
+F_ST, F_PC, F_IV, F_RA, F_IS, F_MO = range(6)
+_F_LC = 6
+
+# packed per-pc metadata (``meta``) fixed columns; the variable-width
+# src/psrc/dst/acc column groups follow (see `_meta_cols`).
+M_KIND, M_NACC, M_PDST, M_TGT, M_TRIPS, M_LSL, M_DSL, M_IVPC = range(8)
+
+
+def _meta_cols(S: int, PS: int, DD: int):
+    """Column offsets of the variable-width groups in the meta table."""
+    m_s = 8
+    m_ps = m_s + S
+    m_d = m_ps + PS
+    m_g = m_d + DD
+    return m_s, m_ps, m_d, m_g
+
+
+_LEGACY_RT_FLAG = "--xla_cpu_use_thunk_runtime=false"
+
+
+def _maybe_prefer_legacy_cpu_runtime() -> None:
+    """Ask XLA:CPU for the legacy (pre-thunk) runtime before the backend
+    initializes.  The fused tick is a ~200-op loop body; the thunk
+    interpreter charges ~8µs of dispatch per op per tick, while the legacy
+    emitter runs the same HLO ~2.5x faster (measured on the tracked
+    serial-CPU host, see docs/simulator.md).  Best-effort only: if jax is
+    already initialized the flag is left alone, and
+    ``REPRO_BATCH_LEGACY_CPU_RT=0`` opts out (e.g. if a future jaxlib
+    drops the flag)."""
+    if os.environ.get("REPRO_BATCH_LEGACY_CPU_RT", "1") == "0":
+        return
+    import sys
+    mod = sys.modules.get("jax")
+    if mod is not None and getattr(mod, "_src", None) is not None:
+        try:  # backend already up? then mutating XLA_FLAGS is a no-op
+            from jax._src import xla_bridge
+            if xla_bridge._backends:
+                return
+        except Exception:
+            pass
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_cpu_use_thunk_runtime" not in flags:
+        os.environ["XLA_FLAGS"] = (flags + " " + _LEGACY_RT_FLAG).strip()
+
 
 def _jax():
     """Import jax lazily so jax-free consumers never pay for it."""
+    _maybe_prefer_legacy_cpu_runtime()
     import jax
     import jax.numpy as jnp
     from jax import lax
@@ -380,25 +461,27 @@ def _build(lanes: Sequence[_Lane]):
     E = max(2, *_rfc_es) if _rfc_es else 1
     IW = max(ln.cfg.issue_width for ln in lanes)
 
+    m_s, m_ps, m_d, m_g = _meta_cols(S, PS, DD)
+    MW = m_g + G                      # packed meta row width
+    NWF = _F_LC + (L + 1) + (DM + 1)  # warp-family row width
+    RVW = (R + 1) + (PR + 1)          # register+predicate value rows
+
+    meta = np.zeros((K, P + 1, MW), i32)
+    meta[:, :, M_KIND] = _OP_EXIT
+    meta[:, :, M_PDST] = PR
+    meta[:, :, M_LSL] = L
+    meta[:, :, M_DSL] = DM
+    meta[:, :, M_IVPC] = -1
+    meta[:, :, m_s: m_s + S] = R
+    meta[:, :, m_ps: m_ps + PS] = PR
+    meta[:, :, m_d: m_d + DD] = R
+    meta[:, :, m_g: m_g + G] = -1
+
     co = {
-        # per-pc instruction metadata (sentinel row at pc=P)
-        "kind": np.full((K, P + 1), _OP_EXIT, i32),
-        "srcs": np.full((K, P + 1, S), R, i32),
-        "psrcs": np.full((K, P + 1, PS), PR, i32),
-        "dsts": np.full((K, P + 1, DD), R, i32),
-        "pdst": np.full((K, P + 1), PR, i32),
-        "nacc": np.zeros((K, P + 1), i32),
-        "acc": np.full((K, P + 1, G), -1, i32),
-        "target": np.zeros((K, P + 1), i32),
-        "trips": np.zeros((K, P + 1), i32),
-        "lslot": np.full((K, P + 1), L, i32),
-        "dslot": np.full((K, P + 1), DM, i32),
-        "ivpc": np.full((K, P + 1), -1, i32),
-        # per-interval tables (sentinel row at iid=IV)
-        "ivr": np.zeros((K, IV + 1), i32),
-        "ivn": np.zeros((K, IV + 1), i32),
-        "ivw": np.zeros((K, IV + 1), i32),
-        "ivh": np.zeros((K, IV + 1), bool),
+        # packed per-pc instruction metadata (sentinel row at pc=P)
+        "meta": meta,
+        # per-interval table: [rounds, nfetch, nwb, has_op] (sentinel at IV)
+        "ivt": np.zeros((K, IV + 1, 4), i32),
         "ivregs": np.full((K, IV + 1, GV), -1, i32),
         # per-lane scalars
         "endpc": np.zeros(K, i32),
@@ -419,8 +502,15 @@ def _build(lanes: Sequence[_Lane]):
         "cached": np.zeros(K, bool), "edge": np.zeros(K, bool),
         "bl": np.zeros(K, bool), "rfc": np.zeros(K, bool),
         "ideal": np.zeros(K, bool), "fam": np.zeros(K, bool),
-        # dummy whose SHAPE carries the static issue-slot unroll count
+        # wedge guard / tick cap: a traced scalar so profiling harnesses can
+        # cap the fused loop without recompiling (production leaves _GUARD)
+        "tmax": np.asarray(_GUARD, i64),
+        # dummies whose SHAPES carry the static widths the traced step
+        # needs (issue-slot unroll, meta column groups, value/counter rows)
         "slots": np.zeros(IW, np.int8),
+        "mdims": np.zeros((S, PS, DD, G), np.int8),
+        "rdims": np.zeros((R + 1, PR + 1), np.int8),
+        "ldims": np.zeros((L + 1, DM + 1), np.int8),
     }
 
     def remap(a, sent_old, sent_new):
@@ -429,28 +519,28 @@ def _build(lanes: Sequence[_Lane]):
     for k, ln in enumerate(lanes):
         c, cfg = ln.code, ln.cfg
         n = c.n_pc
-        co["kind"][k, : n + 1] = c.op_kind
-        co["srcs"][k, : n + 1, : c.srcs.shape[1]] = remap(c.srcs, c.n_regs, R)
-        co["psrcs"][k, : n + 1, : c.psrcs.shape[1]] = \
+        m = meta[k]
+        m[: n + 1, M_KIND] = c.op_kind
+        m[: n + 1, M_NACC] = c.n_acc
+        m[: n + 1, M_PDST] = remap(c.pdst, c.n_preds, PR)
+        m[: n + 1, M_TGT] = c.target
+        m[: n + 1, M_TRIPS] = c.trips
+        m[: n + 1, M_LSL] = remap(c.loop_slot, c.n_loops, L)
+        m[: n + 1, M_DSL] = remap(c.dia_slot, c.n_dias, DM)
+        m[: n + 1, M_IVPC] = c.interval_of_pc
+        m[: n + 1, m_s: m_s + c.srcs.shape[1]] = remap(c.srcs, c.n_regs, R)
+        m[: n + 1, m_ps: m_ps + c.psrcs.shape[1]] = \
             remap(c.psrcs, c.n_preds, PR)
-        co["dsts"][k, : n + 1, : c.dsts.shape[1]] = remap(c.dsts, c.n_regs, R)
-        co["pdst"][k, : n + 1] = remap(c.pdst, c.n_preds, PR)
-        co["nacc"][k, : n + 1] = c.n_acc
-        co["acc"][k, : n + 1, : c.acc_regs.shape[1]] = c.acc_regs
-        co["target"][k, : n + 1] = c.target
-        co["trips"][k, : n + 1] = c.trips
-        co["lslot"][k, : n + 1] = remap(c.loop_slot, c.n_loops, L)
-        co["dslot"][k, : n + 1] = remap(c.dia_slot, c.n_dias, DM)
-        co["ivpc"][k, : n + 1] = c.interval_of_pc
+        m[: n + 1, m_d: m_d + c.dsts.shape[1]] = remap(c.dsts, c.n_regs, R)
+        m[: n + 1, m_g: m_g + c.acc_regs.shape[1]] = c.acc_regs
         nv = c.n_ivs
-        co["ivr"][k, : nv + 1] = c.iv_rounds
-        co["ivn"][k, : nv + 1] = c.iv_nfetch
-        co["ivw"][k, : nv + 1] = c.iv_nwb
-        co["ivh"][k, : nv + 1] = c.iv_has_op
+        co["ivt"][k, : nv + 1, 0] = c.iv_rounds
+        co["ivt"][k, : nv + 1, 1] = c.iv_nfetch
+        co["ivt"][k, : nv + 1, 2] = c.iv_nwb
+        co["ivt"][k, : nv + 1, 3] = c.iv_has_op.astype(i32)
         co["ivregs"][k, : nv + 1, : c.iv_regs.shape[1]] = c.iv_regs
         # sentinel rows must stay inert even where lane rows ended early
-        co["ivh"][k, nv] = False
-        co["ivpc"][k, n] = c.interval_of_pc[n]
+        co["ivt"][k, nv, 3] = 0
 
         co["endpc"][k] = n
         design = cfg.design
@@ -487,22 +577,19 @@ def _build(lanes: Sequence[_Lane]):
         co["ideal"][k] = design == "Ideal"
         co["fam"][k] = cached
 
+    wf = np.zeros((K, W, NWF), i64)
+    wf[:, :, F_ST] = INACTIVE_READY
+    wf[:, :, F_IV] = -1
+    rc = np.full((K, E, 2), -1, i64)
+    rc[:, :, 1] = _BIG
     st = {
         "cycle": np.zeros(K, i64),
         "guard": np.zeros((), i64),
         "alive": np.zeros(K, bool),
         "budget": np.zeros(K, bool),
-        "status": np.full((K, W), INACTIVE_READY, i32),
-        "pc": np.zeros((K, W), i32),
-        "ra": np.zeros((K, W), i64),
-        "iv": np.full((K, W), -1, i32),
-        "issued": np.zeros((K, W), i64),
-        "mops": np.zeros((K, W), i64),
-        "rr": np.zeros((K, W, R + 1), f64),
-        "rm": np.zeros((K, W, R + 1), bool),
-        "pr": np.zeros((K, W, PR + 1), f64),
-        "lc": np.zeros((K, W, L + 1), i32),
-        "dc": np.zeros((K, W, DM + 1), i32),
+        "wf": wf,
+        "cf": np.zeros((K, W, 2 + S + PS), f64),
+        "rv": np.zeros((K, W, RVW, 2), f64),
         "act": np.zeros((K, A), i32),
         "na": np.zeros(K, i32),
         "res": np.zeros((K, W), bool),
@@ -513,8 +600,7 @@ def _build(lanes: Sequence[_Lane]):
         "tok": np.zeros(K, f64),
         "mlast": np.zeros(K, i64),
         "dnext": np.zeros(K, f64),
-        "rkey": np.full((K, E), -1, i32),
-        "rtime": np.full((K, E), _BIG, i64),
+        "rc": rc,
         "rcnt": np.zeros(K, i32),
         "rstamp": np.zeros(K, i64),
         "bd": np.zeros((K, len(CYCLE_CATEGORIES)), i64),
@@ -544,27 +630,27 @@ def _run_jax(co, st):
     """Advance every lane to completion.  Traced+jitted once per shape."""
     _, jnp, lax = _jax()
     i64, f64 = jnp.int64, jnp.float64
-    K, W = st["status"].shape
+    K, W, NWF = st["wf"].shape
     A = st["act"].shape[1]
-    E = st["rkey"].shape[1]       # 1 <=> no RFC lane in this chunk (static)
-    P = co["kind"].shape[1] - 1
-    R = st["rr"].shape[2] - 1
-    PRS = st["pr"].shape[2] - 1
-    LS = st["lc"].shape[2] - 1
-    DS = st["dc"].shape[2] - 1
-    IVS = co["ivr"].shape[1] - 1
+    E = st["rc"].shape[1]         # 1 <=> no RFC lane in this chunk (static)
+    P = co["meta"].shape[1] - 1
+    S, PS, DD, G = co["mdims"].shape
+    R = co["rdims"].shape[0] - 1
+    PRS = co["rdims"].shape[1] - 1
+    RVW = st["rv"].shape[2]       # masked writes use index RVW: OOB-dropped
+    LS = co["ldims"].shape[0] - 1
+    DS = co["ldims"].shape[1] - 1
+    IVS = co["ivt"].shape[1] - 1
     IW = co["slots"].shape[0]
     NCAT = len(CYCLE_CATEGORIES)
+    M_S, M_PS, M_D, M_G = _meta_cols(S, PS, DD)
+    F_DC = _F_LC + LS + 1
     READY, WAIT = INACTIVE_READY, INACTIVE_WAIT
     kk = jnp.arange(K)
     wI = jnp.arange(W)
     aI = jnp.arange(A)
+    ctrI = jnp.arange(NWF - _F_LC)
     BIG = jnp.asarray(_BIG, i64)
-
-    def set_w(arr, wid, mask, val):
-        """arr[k, wid[k]] = val where mask (per-lane single-warp scatter)."""
-        old = arr[kk, wid]
-        return arr.at[kk, wid].set(jnp.where(mask, val, old))
 
     def rnd(s, x):
         """Round a float product before its consuming add.  XLA CPU
@@ -575,35 +661,45 @@ def _run_jax(co, st):
         materialized and rounded exactly like the Python arithmetic."""
         return jnp.where(s["guard"] >= 0, x, 0.0)
 
-    def prefetch(s, mask, wid, force):
-        """_start_prefetch for one selected warp per lane, masked."""
-        pcc = jnp.minimum(s["pc"][kk, wid], P)
-        iid = co["ivpc"][kk, pcc]
-        go = mask & (iid >= 0)
-        if not force:
-            go = go & (iid != s["iv"][kk, wid])
-        s["iv"] = set_w(s["iv"], wid, go, iid)
-        ii = jnp.where(go, iid, IVS)
-        body = go & co["ivh"][kk, ii]
-        nf = co["ivn"][kk, ii].astype(i64)
-        lat = rnd(s, co["ivr"][kk, ii].astype(f64) * co["mrfc"]) \
-            + nf.astype(f64) / co["xbar"]
+    def refresh_cf(s, wid, mask, md):
+        """Recompute the readiness-cache row for one selected warp per lane
+        (the scalar engines' `_refresh_ready`, at the identical sites: the
+        warp's own issue or prefetch — the only events that can change its
+        current instruction's operand times).  ``md`` is the warp's meta
+        row at its (post-update) pc."""
+        sidx = md[:, M_S: M_S + S]                          # (K, S)
+        pidx = md[:, M_PS: M_PS + PS]                       # (K, PS)
+        rvw = s["rv"][kk[:, None], wid[:, None], sidx]      # (K, S, 2)
+        ts = rvw[:, :, 0]
+        fm = rvw[:, :, 1] > 0.0
+        tp = s["rv"][kk[:, None], wid[:, None], R + 1 + pidx, 0]
+        cmax = jnp.maximum(ts.max(axis=1), tp.max(axis=1))
+        cmem = jnp.where(fm, ts, 0.0).max(axis=1)
+        newcf = jnp.concatenate([cmax[:, None], cmem[:, None], ts, tp],
+                                axis=1)
+        oldcf = s["cf"][kk, wid]
+        s["cf"] = s["cf"].at[kk, wid].set(
+            jnp.where(mask[:, None], newcf, oldcf))
+        return s
+
+    def prefetch_slot(s, body, lat):
+        """Charge one prefetch op into the inflight-slot array, masked.
+        Returns (state, done_time) — the caller folds status/ra/iv into
+        its own warp-family row write."""
         slot = jnp.argmin(s["pf"], axis=1)
         freet = s["pf"][kk, slot]
         startt = jnp.maximum(s["cycle"], freet)
         done = (startt.astype(f64) + lat).astype(i64)   # int(start + lat)
         s["pf"] = s["pf"].at[kk, slot].set(jnp.where(body, done, freet))
-        s["status"] = set_w(s["status"], wid, body, PREFETCH)
-        s["ra"] = set_w(s["ra"], wid, body, done)
-        s["cpo"] += body.astype(i64)
-        s["cpc"] += jnp.where(body, lat.astype(i64), 0)
-        s["cps"] += jnp.where(body, done - s["cycle"], 0)
-        s["cm"] += jnp.where(body, nf, 0)
+        return s, done
+
+    def prefetch_charge(s, wid, ii, body, done):
+        """Max the fetched interval's registers up to the landing time."""
         regs = co["ivregs"][kk, ii]                     # (K, GV)
         vp = (regs >= 0) & body[:, None]
-        ridx = jnp.where(vp, regs, R)                   # dummy col stays 0
+        ridx = jnp.where(vp, regs, RVW)                 # OOB: masked drop
         val = jnp.where(vp, done[:, None].astype(f64), 0.0)
-        s["rr"] = s["rr"].at[kk[:, None], wid[:, None], ridx].max(val)
+        s["rv"] = s["rv"].at[kk[:, None], wid[:, None], ridx, 0].max(val)
         return s
 
     def activation(s, act):
@@ -612,73 +708,73 @@ def _run_jax(co, st):
         admitted wids only increase and the READY pool never grows mid-loop,
         so batched ascending-wid activation charges identical prefetches)."""
         def more(s):
-            cand = s["res"] & (s["status"] == READY)
+            cand = s["res"] & (s["wf"][:, :, F_ST] == READY)
             return jnp.any(act & (s["na"] < co["acap"])
                            & jnp.any(cand, axis=1))
 
         def one(s):
-            cand = s["res"] & (s["status"] == READY)
+            cand = s["res"] & (s["wf"][:, :, F_ST] == READY)
             do = act & (s["na"] < co["acap"]) & jnp.any(cand, axis=1)
-            wid = jnp.argmax(cand, axis=1).astype(s["act"].dtype)
-            s = prefetch(s, do & co["cached"], wid, True)
+            wid = jnp.argmax(cand, axis=1)
+            # _start_prefetch(force=True) for the activating warp
+            row = s["wf"][kk, wid]                       # (K, NWF)
+            pcc = jnp.minimum(row[:, F_PC], P)
+            md = co["meta"][kk, pcc]
+            iid = md[:, M_IVPC]
+            go = do & co["cached"] & (iid >= 0)
+            ii = jnp.where(go, iid, IVS)
+            ivt = co["ivt"][kk, ii]                      # (K, 4)
+            body = go & (ivt[:, 3] > 0)
+            nf = ivt[:, 1].astype(i64)
+            lat = rnd(s, ivt[:, 0].astype(f64) * co["mrfc"]) \
+                + nf.astype(f64) / co["xbar"]
+            s, done = prefetch_slot(s, body, lat)
+            s["cpo"] += body.astype(i64)
+            s["cpc"] += jnp.where(body, lat.astype(i64), 0)
+            s["cps"] += jnp.where(body, done - s["cycle"], 0)
+            s["cm"] += jnp.where(body, nf, 0)
+            s = prefetch_charge(s, wid, ii, body, done)
+            # fold activation + prefetch into one warp-family row write
+            newst = jnp.where(body, PREFETCH,
+                              jnp.where(do, ACTIVE, row[:, F_ST]))
+            newiv = jnp.where(go, iid.astype(i64), row[:, F_IV])
+            newra = jnp.where(body, done, row[:, F_RA])
+            newrow = jnp.concatenate(
+                [newst[:, None], row[:, F_PC: F_PC + 1], newiv[:, None],
+                 newra[:, None], row[:, F_RA + 1:]], axis=1)
+            s["wf"] = s["wf"].at[kk, wid].set(newrow)
+            s = refresh_cf(s, wid, body, md)
             s["cact"] += do.astype(i64)
             pos = jnp.minimum(s["na"], A - 1)
             oldv = s["act"][kk, pos]
-            s["act"] = s["act"].at[kk, pos].set(jnp.where(do, wid, oldv))
+            s["act"] = s["act"].at[kk, pos].set(
+                jnp.where(do, wid.astype(s["act"].dtype), oldv))
             s["na"] = s["na"] + do.astype(s["na"].dtype)
-            stw = s["status"][kk, wid]
-            s["status"] = set_w(s["status"], wid, do,
-                                jnp.where(stw == PREFETCH, stw, ACTIVE))
             return s
 
         return lax.while_loop(more, one, s)
 
-    def scan(s):
-        """Per-active-slot readiness (recomputed per issue slot, like the
-        golden scheduler's fresh scans)."""
-        posv = aI[None, :] < s["na"][:, None]
-        wida = jnp.where(posv, s["act"], 0)
-        stat = s["status"][kk[:, None], wida]
-        isact = posv & (stat == ACTIVE)
-        pca = s["pc"][kk[:, None], wida]
-        atend = pca >= co["endpc"][:, None]
-        pcc = jnp.minimum(pca, P)
-        sidx = co["srcs"][kk[:, None], pcc]             # (K, W, S)
-        ts = s["rr"][kk[:, None, None], wida[:, :, None], sidx]
-        fm = s["rm"][kk[:, None, None], wida[:, :, None], sidx]
-        pidx = co["psrcs"][kk[:, None], pcc]            # (K, W, PS)
-        tp = s["pr"][kk[:, None, None], wida[:, :, None], pidx]
-        cyc = s["cycle"].astype(f64)[:, None]
-        ready = isact & ~atend \
-            & (jnp.maximum(ts.max(axis=2), tp.max(axis=2)) <= cyc)
-        # long-latency mem block: t > cycle + 2*l1_cycles on a mem-produced src
-        thr = (s["cycle"] + co["thr"]).astype(f64)[:, None, None]
-        blocked = jnp.where(fm & (ts > thr), ts, 0.0).max(axis=2)
-        pend_s = ts > cyc[:, :, None]
-        return {"posv": posv, "wida": wida, "stat": stat, "isact": isact,
-                "atend": atend, "ts": ts, "tp": tp, "ready": ready,
-                "blocked": blocked,
-                "pend": pend_s.any(axis=2) | (tp > cyc[:, :, None]).any(axis=2),
-                "pmem": (pend_s & fm).any(axis=2)}
-
     def issue_one(s, picked, wsel):
         """The _issue body for one selected warp per lane, masked.
         Returns (state, instruction-issued, structural-stall)."""
-        pcs = s["pc"][kk, wsel]
+        row = s["wf"][kk, wsel]                         # (K, NWF)
+        pcs = row[:, F_PC]
         pcc = jnp.minimum(pcs, P)
-        kind = co["kind"][kk, pcc]
+        md = co["meta"][kk, pcc]                        # (K, MW)
+        kind = md[:, M_KIND]
         bra = picked & (kind == _OP_BRA)
         ext = picked & (kind == _OP_EXIT)
         opnd = picked & (kind != _OP_BRA) & (kind != _OP_EXIT)
-        nacc = co["nacc"][kk, pcc].astype(i64)
+        nacc = md[:, M_NACC].astype(i64)
         # RFC classification against the PRE-issue cache state (statically
         # skipped in chunks with no RFC lane: co["rfc"] is all-False there,
         # so every consumer of n_miss/n_hit reduces to the zero branch)
-        regs = co["acc"][kk, pcc]                       # (K, G)
+        regs = md[:, M_G: M_G + G]                      # (K, G)
         if E > 1:
             onr = (regs >= 0) & opnd[:, None] & co["rfc"][:, None]
-            keyv = jnp.where(onr, wsel[:, None] * (R + 1) + regs, -2)
-            memb = (s["rkey"][:, None, :] == keyv[:, :, None]).any(axis=2)
+            keyv = jnp.where(onr,
+                             wsel.astype(i64)[:, None] * (R + 1) + regs, -2)
+            memb = (s["rc"][:, None, :, 0] == keyv[:, :, None]).any(axis=2)
             n_miss = (onr & ~memb).sum(axis=1).astype(i64)
             n_hit = memb.sum(axis=1).astype(i64)
         else:
@@ -718,39 +814,41 @@ def _run_jax(co, st):
                                            jnp.where(co["fam"], nacc, 0)), 0)
         # RFC LRU mutation: move-to-end every pre-state hit in operand order,
         # then insert misses with oldest-stamp eviction (OrderedDict-equal).
-        lru = ok & co["rfc"] if E > 1 else jnp.zeros((K,), bool)
-        for i in range(regs.shape[1] if E > 1 else 0):
-            ki = keyv[:, i]
-            hv = lru & memb[:, i]
-            pos = jnp.argmax(s["rkey"] == ki[:, None], axis=1)
-            told = s["rtime"][kk, pos]
-            s["rtime"] = s["rtime"].at[kk, pos].set(
-                jnp.where(hv, s["rstamp"], told))
-            s["rstamp"] += hv.astype(i64)
-        for i in range(regs.shape[1] if E > 1 else 0):
-            ki = keyv[:, i]
-            membL = (s["rkey"] == ki[:, None]).any(axis=1)  # LIVE state
-            ins = lru & (ki >= 0) & ~membL
-            full = s["rcnt"] >= co["ecap"]
-            slot = jnp.where(full,
-                             jnp.argmin(s["rtime"], axis=1)
-                             .astype(s["rcnt"].dtype),
-                             s["rcnt"])
-            slot = jnp.minimum(slot, s["rkey"].shape[1] - 1)
-            kold = s["rkey"][kk, slot]
-            toldi = s["rtime"][kk, slot]
-            s["rkey"] = s["rkey"].at[kk, slot].set(jnp.where(ins, ki, kold))
-            s["rtime"] = s["rtime"].at[kk, slot].set(
-                jnp.where(ins, s["rstamp"], toldi))
-            s["rstamp"] += ins.astype(i64)
-            s["rcnt"] += (ins & ~full).astype(s["rcnt"].dtype)
+        # The hit phase is ONE scatter-max: stamps are globally monotone, so
+        # a duplicate key's last move-to-end is exactly the max stamp, and
+        # every fresh stamp exceeds the entry's old one.
+        if E > 1:
+            lru = ok & co["rfc"]
+            hvs = lru[:, None] & memb                   # (K, G)
+            hvi = hvs.astype(i64)
+            stamps = s["rstamp"][:, None] + jnp.cumsum(hvi, axis=1) - hvi
+            pos = jnp.argmax(s["rc"][:, None, :, 0] == keyv[:, :, None],
+                             axis=2)
+            posm = jnp.where(hvs, pos, E)               # OOB: masked drop
+            s["rc"] = s["rc"].at[kk[:, None], posm, 1].max(stamps)
+            s["rstamp"] += hvi.sum(axis=1)
+            for i in range(G):                          # insert/evict phase
+                ki = keyv[:, i]
+                membL = (s["rc"][:, :, 0] == ki[:, None]).any(axis=1)
+                ins = lru & (ki >= 0) & ~membL          # vs LIVE state
+                full = s["rcnt"] >= co["ecap"]
+                slot = jnp.where(full,
+                                 jnp.argmin(s["rc"][:, :, 1], axis=1)
+                                 .astype(s["rcnt"].dtype),
+                                 s["rcnt"])
+                slot = jnp.minimum(slot, E - 1)
+                oldrow = s["rc"][kk, slot]
+                newr = jnp.stack([ki, s["rstamp"]], axis=1)
+                s["rc"] = s["rc"].at[kk, slot].set(
+                    jnp.where(ins[:, None], newr, oldrow))
+                s["rstamp"] += ins.astype(i64)
+                s["rcnt"] += (ins & ~full).astype(s["rcnt"].dtype)
         # memory latency: deterministic jitter hash + single-server DRAM queue
         is_ld = kind == _OP_LD
         ldo = ok & is_ld
-        mops = s["mops"][kk, wsel]
+        mops = row[:, F_MO]
         h = (wsel.astype(i64) * 2654435761 + mops * 40503
              + co["seed"] * 97) & 0xFFFF
-        s["mops"] = s["mops"].at[kk, wsel].add(jnp.where(ldo, 1, 0))
         hit = (h.astype(f64) / 65535.0) < co["l1h"]
         spread = rnd(s, ((h >> 3).astype(f64) / 8191.0 - 0.5) * 0.6)
         dstart = jnp.maximum(s["cycle"].astype(f64), s["dnext"])
@@ -764,47 +862,85 @@ def _run_jax(co, st):
         da = jnp.where(is_set, base + co["aluf"],
                        jnp.where(is_ld, base + (mlat.astype(f64) + co["wlat"]),
                                  base + (co["aluf"] + co["wlat"])))
-        pd = co["pdst"][kk, pcc]
+        # dst-register + dst-predicate writeback: ONE scatter into the
+        # unified (reg | pred) value plane, masked rows dropped via OOB
+        pd = md[:, M_PDST]
         onp = ok & is_set & (pd < PRS)
-        pidx = jnp.where(onp, pd, PRS)
-        oldp = s["pr"][kk, wsel, pidx]
-        s["pr"] = s["pr"].at[kk, wsel, pidx].set(jnp.where(onp, da, oldp))
-        dsts = co["dsts"][kk, pcc]                      # (K, DD)
+        dsts = md[:, M_D: M_D + DD]                     # (K, DD)
         ond = (ok & ~is_set)[:, None] & (dsts < R)
-        didx = jnp.where(ond, dsts, R)                  # dummy col stays 0
-        s["rr"] = s["rr"].at[kk[:, None], wsel[:, None], didx].set(
-            jnp.where(ond, da[:, None], 0.0))
-        s["rm"] = s["rm"].at[kk[:, None], wsel[:, None], didx].set(
-            ond & is_ld[:, None])
+        didx = jnp.where(ond, dsts, RVW)
+        pcol = jnp.where(onp, R + 1 + pd, RVW)[:, None]
+        wix = jnp.concatenate([didx, pcol], axis=1)     # (K, DD+1)
+        vt = jnp.concatenate(
+            [jnp.broadcast_to(da[:, None], ond.shape), da[:, None]], axis=1)
+        vm = jnp.concatenate(
+            [(ond & is_ld[:, None]).astype(f64),
+             jnp.zeros((K, 1), f64)], axis=1)
+        s["rv"] = s["rv"].at[kk[:, None], wsel[:, None], wix].set(
+            jnp.stack([vt, vm], axis=2))
         happened = bra | ext | ok
-        s["issued"] = s["issued"].at[kk, wsel].add(jnp.where(happened, 1, 0))
-        s["status"] = set_w(s["status"], wsel, ext, DONE)
-        # branch resolution (loop trip counters / diamond visit hashes)
-        tgt = co["target"][kk, pcc]
-        trips = co["trips"][kk, pcc]
-        lsl = co["lslot"][kk, pcc]
-        dsl = co["dslot"][kk, pcc]
-        uncond = co["psrcs"][kk, pcc, 0] >= PRS
+        # branch resolution (loop trip counters / diamond visit hashes);
+        # the counters live in the warp-family row — updated in place via
+        # one-hot column selects, folded into the single row write below
+        tgt = md[:, M_TGT]
+        trips = md[:, M_TRIPS]
+        lsl = md[:, M_LSL]
+        dsl = md[:, M_DSL]
+        uncond = md[:, M_PS] >= PRS
         isl = bra & (lsl < LS)
         lidx = jnp.where(isl, lsl, LS)
-        oldl = s["lc"][kk, wsel, lidx]
+        oldl = jnp.take_along_axis(row, (_F_LC + lidx)[:, None], axis=1)[:, 0]
         c = oldl + 1
         tkl = c < trips
-        s["lc"] = s["lc"].at[kk, wsel, lidx].set(
-            jnp.where(isl, jnp.where(tkl, c, 0), oldl))
+        newl = jnp.where(tkl, c, 0)
         isd = bra & ~uncond & (lsl >= LS)
         didx2 = jnp.where(isd, dsl, DS)
-        v = s["dc"][kk, wsel, didx2]
-        s["dc"] = s["dc"].at[kk, wsel, didx2].set(jnp.where(isd, v + 1, v))
-        hh = (wsel.astype(i64) * 31 + v.astype(i64) * 17 + co["seed"]) & 0xFF
+        v = jnp.take_along_axis(row, (F_DC + didx2)[:, None], axis=1)[:, 0]
+        hh = (wsel.astype(i64) * 31 + v * 17 + co["seed"]) & 0xFF
         taken = jnp.where(uncond, True,
                           jnp.where(isl, tkl, (hh & 1) == 1))
-        npc = jnp.where(bra, jnp.where(taken, tgt, pcs + 1),
+        npc = jnp.where(bra, jnp.where(taken, tgt.astype(i64), pcs + 1),
                         jnp.where(ok, pcs + 1, pcs))
-        s["pc"] = set_w(s["pc"], wsel, picked & ~ext, npc)
+        npce = jnp.where(picked & ~ext, npc, pcs)
         # edge prefetch: issued warp crossed into a new interval's block
+        # (_start_prefetch with force=False, at the post-update pc)
         ep = co["edge"] & (bra | ok) & (npc < co["endpc"])
-        s = prefetch(s, ep, wsel, False)
+        pccp = jnp.minimum(npce, P)
+        md2 = co["meta"][kk, pccp]          # shared with the cache refresh
+        iid = md2[:, M_IVPC]
+        go = ep & (iid >= 0) & (iid != row[:, F_IV])
+        ii = jnp.where(go, iid, IVS)
+        ivt = co["ivt"][kk, ii]
+        body = go & (ivt[:, 3] > 0)
+        nf = ivt[:, 1].astype(i64)
+        lat = rnd(s, ivt[:, 0].astype(f64) * co["mrfc"]) \
+            + nf.astype(f64) / co["xbar"]
+        s, done = prefetch_slot(s, body, lat)
+        s["cpo"] += body.astype(i64)
+        s["cpc"] += jnp.where(body, lat.astype(i64), 0)
+        s["cps"] += jnp.where(body, done - s["cycle"], 0)
+        s["cm"] += jnp.where(body, nf, 0)
+        s = prefetch_charge(s, wsel, ii, body, done)
+        # ONE warp-family row write covers pc/status/iv/ra/issued/mops and
+        # both branch counters (ext and edge-prefetch are disjoint: ep
+        # requires bra|ok, which excludes exit instructions)
+        newst = jnp.where(ext, DONE,
+                          jnp.where(body, PREFETCH, row[:, F_ST]))
+        newiv = jnp.where(go, iid.astype(i64), row[:, F_IV])
+        newra = jnp.where(body, done, row[:, F_RA])
+        newis = row[:, F_IS] + happened.astype(i64)
+        newmo = mops + ldo.astype(i64)
+        ctr = row[:, _F_LC:]
+        ctr = jnp.where(isl[:, None] & (ctrI[None, :] == lidx[:, None]),
+                        newl[:, None], ctr)
+        ctr = jnp.where(isd[:, None]
+                        & (ctrI[None, :] == (LS + 1 + didx2)[:, None]),
+                        (v + 1)[:, None], ctr)
+        newrow = jnp.concatenate(
+            [newst[:, None], npce[:, None], newiv[:, None], newra[:, None],
+             newis[:, None], newmo[:, None], ctr], axis=1)
+        s["wf"] = s["wf"].at[kk, wsel].set(newrow)
+        s = refresh_cf(s, wsel, happened, md2)
         return s, happened, sfail
 
     def tick(s):
@@ -816,61 +952,84 @@ def _run_jax(co, st):
         s["alive"] = s["alive"] & ~exceed
         act = s["alive"]
         # wake: WAIT->READY, PREFETCH->ACTIVE once ready_at arrives
-        wake = s["res"] & act[:, None] & (s["ra"] <= s["cycle"][:, None])
-        st0 = s["status"]
-        s["status"] = jnp.where(wake & (st0 == WAIT), READY,
-                                jnp.where(wake & (st0 == PREFETCH),
-                                          ACTIVE, st0))
+        stp = s["wf"][:, :, F_ST]
+        wake = s["res"] & act[:, None] \
+            & (s["wf"][:, :, F_RA] <= s["cycle"][:, None])
+        ns = jnp.where(wake & (stp == WAIT), READY,
+                       jnp.where(wake & (stp == PREFETCH), ACTIVE, stp))
+        s["wf"] = s["wf"].at[:, :, F_ST].set(ns)
         s = activation(s, act)
-        # issue slots (round-robin rank arithmetic == the golden scan)
+        # issue slots (round-robin rank arithmetic == the golden scan).
+        # The active list is frozen across the unrolled slots (compaction
+        # runs after), so slot position / rank / DONE-mark bookkeeping is
+        # accumulated per slot and applied in two scatters at the end —
+        # deferring the DONE status write is exact because an at-end warp
+        # is never ready (atend gates every consumer the status would).
+        posv = aI[None, :] < s["na"][:, None]
+        wida = jnp.where(posv, s["act"], 0)
+        nz = jnp.maximum(s["na"], 1).astype(i64)
+        rank = jnp.where(posv,
+                         (aI[None, :] - (s["cycle"] % nz)[:, None])
+                         % nz[:, None], BIG)
+        ndacc = jnp.zeros((K, A), bool)
+        msacc = jnp.zeros((K, A), f64)
         issue_any = jnp.zeros((K,), bool)
         struct = jnp.zeros((K,), bool)
-        stall_until = jnp.zeros((K, W), f64)
         for j in range(IW):
             slot_on = act & (j < co["iw"])
-            sc = scan(s)
-            nz = jnp.maximum(s["na"], 1).astype(i64)
-            rank = jnp.where(sc["posv"],
-                             (aI[None, :] - (s["cycle"] % nz)[:, None])
-                             % nz[:, None], BIG)
-            rrk = jnp.where(sc["ready"] & slot_on[:, None], rank, BIG)
+            wfa = s["wf"][kk[:, None], wida]            # (K, A, NWF)
+            cfa = s["cf"][kk[:, None], wida]            # (K, A, CW)
+            stat = wfa[:, :, F_ST]
+            isact = posv & (stat == ACTIVE)
+            pca = wfa[:, :, F_PC]
+            atend = pca >= co["endpc"][:, None]
+            # readiness/blockedness from the cached per-warp planes — no
+            # per-slot operand gathers (scalar `_refresh_ready` semantics:
+            # a warp's operand times only change when IT issues/prefetches)
+            cyc = s["cycle"].astype(f64)[:, None]
+            ready = isact & ~atend & (cfa[:, :, 0] <= cyc)
+            thr = (s["cycle"] + co["thr"]).astype(f64)[:, None]
+            blocked = jnp.where(cfa[:, :, 1] > thr, cfa[:, :, 1], 0.0)
+            rrk = jnp.where(ready & slot_on[:, None], rank, BIG)
             crank = rrk.min(axis=1)
             picked = (crank < BIG) & slot_on
-            visited = sc["posv"] & slot_on[:, None] & (rank <= crank[:, None])
-            # scanned warps at program end retire (status: DONE is max)
-            nd = visited & sc["isact"] & sc["atend"]
-            s["status"] = s["status"].at[kk[:, None], sc["wida"]].max(
-                jnp.where(nd, DONE, 0))
+            visited = posv & slot_on[:, None] & (rank <= crank[:, None])
+            # scanned warps at program end retire (applied after the slots)
+            ndacc = ndacc | (visited & isact & atend)
             # scanned warps blocked on long memory: deactivation candidates
-            ms = visited & sc["isact"] & ~sc["atend"] & ~sc["ready"] \
-                & (sc["blocked"] > 0)
-            stall_until = stall_until.at[kk[:, None], sc["wida"]].max(
-                jnp.where(ms, sc["blocked"], 0.0))
+            ms = visited & isact & ~atend & ~ready & (blocked > 0)
+            msacc = jnp.maximum(msacc, jnp.where(ms, blocked, 0.0))
             wsel = s["act"][kk, jnp.argmin(rrk, axis=1)]
             s, happened, sfail = issue_one(s, picked, wsel)
             issue_any = issue_any | happened
             struct = struct | sfail
+        s["wf"] = s["wf"].at[kk[:, None], wida, F_ST].max(
+            jnp.where(ndacc, DONE, 0))
+        stall_until = jnp.zeros((K, W), f64).at[kk[:, None], wida].max(msacc)
         # two-level deactivation (cached designs swap stalled warps out)
-        de = (stall_until > 0) & (s["status"] == ACTIVE) \
+        stp2 = s["wf"][:, :, F_ST]
+        de = (stall_until > 0) & (stp2 == ACTIVE) \
             & co["cached"][:, None] & act[:, None]
-        s["status"] = jnp.where(de, WAIT, s["status"])
-        s["ra"] = jnp.where(de, stall_until.astype(i64), s["ra"])
-        ivv = s["iv"]
+        ivv = s["wf"][:, :, F_IV]
         ii = jnp.where(de & (ivv >= 0), ivv, IVS)
-        nwb = jnp.where(de, co["ivw"][kk[:, None], ii].astype(i64), 0) \
+        nwb = jnp.where(de, co["ivt"][kk[:, None], ii, 2].astype(i64), 0) \
             .sum(axis=1)
         s["cwb"] += nwb
         s["cm"] += nwb
-        s["iv"] = jnp.where(de, -1, s["iv"])
-        # compact the active list: drop deactivated (WAIT) + retired (DONE)
-        posv = aI[None, :] < s["na"][:, None]
-        wida = jnp.where(posv, s["act"], 0)
-        stw = s["status"][kk[:, None], wida]
+        s["wf"] = s["wf"].at[:, :, F_ST].set(jnp.where(de, WAIT, stp2))
+        s["wf"] = s["wf"].at[:, :, F_RA].set(
+            jnp.where(de, stall_until.astype(i64), s["wf"][:, :, F_RA]))
+        s["wf"] = s["wf"].at[:, :, F_IV].set(jnp.where(de, -1, ivv))
+        # compact the active list: drop deactivated (WAIT) + retired (DONE).
+        # Stable compaction = cumsum of keepers + dropped-OOB scatter (the
+        # argsort this replaces cost more than every other tick op).
+        stw = s["wf"][kk[:, None], wida, F_ST]
         gone = posv & act[:, None] & ((stw == WAIT) | (stw == DONE))
         keep = posv & ~gone
-        perm = jnp.argsort(jnp.where(keep, 0, 1).astype(jnp.int32), axis=1,
-                           stable=True)
-        s["act"] = jnp.take_along_axis(s["act"], perm, axis=1)
+        cpos = jnp.where(keep, jnp.cumsum(keep.astype(jnp.int32), axis=1) - 1,
+                         A)
+        s["act"] = jnp.zeros_like(s["act"]).at[kk[:, None], cpos].set(
+            wida.astype(s["act"].dtype))
         s["na"] = keep.sum(axis=1).astype(s["na"].dtype)
         # retire DONE warps from residency, admit pending warps
         donep = posv & act[:, None] & (stw == DONE)
@@ -892,12 +1051,18 @@ def _run_jax(co, st):
         fin = act & (s["nr"] == 0) & (s["ptr"] >= co["nw"])
         s["alive"] = s["alive"] & ~fin
         adv = act & ~fin
-        # classify the zero-issue cycle + find the next event horizon
-        sc = scan(s)
-        live = sc["isact"] & ~sc["atend"]
-        saw_pf = (sc["posv"] & (sc["stat"] == PREFETCH)).any(axis=1)
-        saw_mem = (live & sc["pmem"]).any(axis=1)
-        saw_dep = (live & sc["pend"]).any(axis=1)
+        # classify the zero-issue cycle + find the next event horizon —
+        # all elementwise reads of the status/pc/readiness planes (status
+        # ACTIVE/PREFETCH <=> active-list membership, so no slot gathers)
+        stc = s["wf"][:, :, F_ST]
+        pcw = s["wf"][:, :, F_PC]
+        livew = (stc == ACTIVE) & (pcw < co["endpc"][:, None])
+        cycf = s["cycle"].astype(f64)
+        cmaxw = s["cf"][:, :, 0]
+        cmemw = s["cf"][:, :, 1]
+        saw_pf = (stc == PREFETCH).any(axis=1)
+        saw_mem = (livew & (cmemw > cycf[:, None])).any(axis=1)
+        saw_dep = (livew & (cmaxw > cycf[:, None])).any(axis=1)
         drain = (s["ptr"] >= co["nw"]) & (s["nr"] < co["tcap"])
         cat = jnp.where(drain, _CAT_INDEX["drain"],
               jnp.where(struct, _CAT_INDEX["bank_conflict"],
@@ -906,16 +1071,17 @@ def _run_jax(co, st):
               jnp.where(saw_dep, _CAT_INDEX["alu_dep"],
                         _CAT_INDEX["scheduler_idle"])))))
         cyc = s["cycle"]
-        cycf = cyc.astype(f64)
         INF = jnp.inf
-        cf = s["col"].min(axis=1)
-        c1 = jnp.where(cf > cyc, cf.astype(f64), INF)
-        wnp = s["res"] & ((s["status"] == WAIT) | (s["status"] == PREFETCH))
-        c2 = jnp.where(wnp, s["ra"].astype(f64), INF).min(axis=1)
-        tsrc = jnp.where(live[:, :, None] & (sc["ts"] > cycf[:, None, None]),
-                         sc["ts"], INF).min(axis=(1, 2))
-        tpd = jnp.where(live[:, :, None] & (sc["tp"] > cycf[:, None, None]),
-                        sc["tp"], INF).min(axis=(1, 2))
+        colf = s["col"].min(axis=1)
+        c1 = jnp.where(colf > cyc, colf.astype(f64), INF)
+        wnp = s["res"] & ((stc == WAIT) | (stc == PREFETCH))
+        c2 = jnp.where(wnp, s["wf"][:, :, F_RA].astype(f64), INF).min(axis=1)
+        tsv = s["cf"][:, :, 2: 2 + S]
+        tpv = s["cf"][:, :, 2 + S:]
+        tsrc = jnp.where(livew[:, :, None] & (tsv > cycf[:, None, None]),
+                         tsv, INF).min(axis=(1, 2))
+        tpd = jnp.where(livew[:, :, None] & (tpv > cycf[:, None, None]),
+                        tpv, INF).min(axis=(1, 2))
         best = jnp.minimum(jnp.minimum(c1, c2), jnp.minimum(tsrc, tpd))
         nxt = jnp.where(jnp.isinf(best), cyc + 1,
                         jnp.maximum(best.astype(i64), cyc + 1))
@@ -931,7 +1097,7 @@ def _run_jax(co, st):
         return s
 
     def running(s):
-        return jnp.any(s["alive"]) & (s["guard"] <= _GUARD)
+        return jnp.any(s["alive"]) & (s["guard"] <= co["tmax"])
 
     return lax.while_loop(running, tick, st)
 
@@ -940,16 +1106,43 @@ def _run_jax(co, st):
 # trace time, so the jitted path never pays for it).
 _DEBUG_HOOK = None
 
-_JITTED = None
+# Launch accounting for the perf ledger: XLA compile wall vs steady-state
+# simulation wall, plus the fused-loop tick count (how hard the
+# event-horizon skip is working).  `bench_sim` snapshots this around its
+# batch A/B so `BENCH_sim.json` can report `compile_s` separately.
+RUN_STATS = {"compile_s": 0.0, "run_s": 0.0,
+             "compiles": 0, "launches": 0, "ticks": 0}
 
 
-def _get_runner():
-    global _JITTED
-    if _JITTED is None:
+def reset_run_stats() -> dict:
+    """Zero the compile/run accounting (returns the live dict)."""
+    for k, v in RUN_STATS.items():
+        RUN_STATS[k] = type(v)(0)
+    return RUN_STATS
+
+
+_COMPILED: dict = {}
+
+
+def _aot_compile(co, st):
+    """Compile (or fetch) the executable for this chunk's shape bucket.
+
+    Ahead-of-time ``lower().compile()`` instead of a bare ``jax.jit`` call
+    so compilation wall is attributed to ``RUN_STATS["compile_s"]`` and the
+    launch wall to ``RUN_STATS["run_s"]`` — the honest throughput split the
+    ledger reports (the persistent compile cache still applies)."""
+    sig = (tuple(sorted((k, v.shape, str(v.dtype)) for k, v in co.items())),
+           tuple(sorted((k, v.shape, str(v.dtype)) for k, v in st.items())))
+    fn = _COMPILED.get(sig)
+    if fn is None:
         jax, _, _ = _jax()
         _maybe_enable_compile_cache()
-        _JITTED = jax.jit(_run_jax)
-    return _JITTED
+        t0 = time.perf_counter()
+        fn = jax.jit(_run_jax).lower(co, st).compile()
+        RUN_STATS["compile_s"] += time.perf_counter() - t0
+        RUN_STATS["compiles"] += 1
+        _COMPILED[sig] = fn
+    return fn
 
 
 def _run_lanes(lanes: Sequence[_Lane]) -> list:
@@ -957,8 +1150,13 @@ def _run_lanes(lanes: Sequence[_Lane]) -> list:
 
     co, st = _build(lanes)
     with enable_x64():  # the scalar engines do Python-f64 arithmetic
-        out = _get_runner()(co, st)
+        fn = _aot_compile(co, st)
+        t0 = time.perf_counter()
+        out = fn(co, st)
         out = {k: np.asarray(v) for k, v in out.items()}
+        RUN_STATS["run_s"] += time.perf_counter() - t0
+        RUN_STATS["launches"] += 1
+        RUN_STATS["ticks"] += int(out["guard"])
     if out["alive"].any():
         raise RuntimeError("batch simulator wedged")
     return [_extract(ln, i, out) for i, ln in enumerate(lanes)]
@@ -974,7 +1172,7 @@ def _extract(lane: _Lane, i: int, out: dict):
         bd[c] = int(out["bd"][i, j])
     res = SimResult(design=cfg.design, workload=lane.workload.name,
                     cycles=int(out["cycle"][i]),
-                    instructions=int(out["issued"][i].sum()),
+                    instructions=int(out["wf"][i, :, F_IS].sum()),
                     resident_warps=lane.occupancy,
                     rfc_hits=int(out["ch"][i]),
                     rfc_accesses=int(out["ca"][i]),
@@ -996,6 +1194,12 @@ def _extract(lane: _Lane, i: int, out: dict):
 # Lanes per compiled run: bounds peak memory on huge sweeps while keeping
 # each launch big enough to amortize dispatch.
 _MAX_LANES = 512
+
+# Lanes per sub-chunk within a shape group (see `_chunk_lanes`): small
+# enough that a length-sorted group retires its short lanes early instead
+# of carrying them to the group's slowest straggler, big enough that the
+# lane-independent while-loop overhead stays a few percent of the launch.
+_SUB_LANES = 8
 
 
 def run_batch(jobs: Sequence[tuple[Workload, SimConfig]], *,
@@ -1044,7 +1248,17 @@ def _chunk_lanes(lanes: list[_Lane], idxs: list[int]):
     from one BL bystander.  Within a group, lanes are ordered by a crude
     run-length estimate: the lockstep while-loop runs until the *slowest*
     lane finishes, so co-scheduling similar-length lanes keeps the rest of
-    the chunk from idling (and finished lanes from being dead weight)."""
+    the chunk from idling (and finished lanes from being dead weight).
+
+    Groups are then cut into sub-chunks of at most `_SUB_LANES` lanes.
+    Per-tick cost is nearly linear in the lane count (the K-independent
+    loop overhead is small), so a finished lane that stays resident until
+    the chunk's slowest lane retires costs almost as much as a live one —
+    on the tracked sweep the longest lane runs ~5x the mean, and one big
+    chunk burns that whole imbalance as dead weight.  Length-sorted
+    sub-chunks retire short lanes in cheap early launches and leave the
+    stragglers in small tail chunks, at the price of a few extra XLA
+    shapes (compiled once, persistently cached)."""
     groups: dict[tuple, list[int]] = {}
     for j, ln in enumerate(lanes):
         cfg = ln.cfg
@@ -1053,8 +1267,8 @@ def _chunk_lanes(lanes: list[_Lane], idxs: list[int]):
         groups.setdefault(sig, []).append(j)
     for sig, members in groups.items():
         members.sort(key=lambda j: _length_hint(lanes[j]))
-        for lo in range(0, len(members), _MAX_LANES):
-            part = members[lo: lo + _MAX_LANES]
+        for lo in range(0, len(members), _SUB_LANES):
+            part = members[lo: lo + _SUB_LANES]
             yield [lanes[j] for j in part], [idxs[j] for j in part]
 
 

@@ -130,6 +130,83 @@ def test_heterogeneous_batch_bit_identical():
         assert got == simulate(w, cfg), (cfg.design, w.name)
 
 
+# --------------------------------------- BATCH_REV 2: stats + time skipping
+
+def test_run_stats_compile_run_split():
+    """`RUN_STATS` attributes XLA compile wall and launch wall separately —
+    the `compile_s` split the perf ledger reports — and counts fused-loop
+    ticks.  A cached executable legitimately reports zero compile wall, but
+    never zero launches or ticks."""
+    from repro.sim import batch as B
+
+    w = WORKLOADS["kmeans"]
+    cfg = design_config("LTRF", table2_config=7, num_warps=4)
+    stats = B.reset_run_stats()
+    assert stats == {"compile_s": 0.0, "run_s": 0.0,
+                     "compiles": 0, "launches": 0, "ticks": 0}
+    res, = B.run_batch([(w, cfg)], fallback=False)
+    assert stats["launches"] == 1
+    assert stats["run_s"] > 0.0
+    assert stats["ticks"] > 0
+    # in-process executable cache hits skip compilation entirely; either
+    # way the wall and the counter must agree
+    assert (stats["compiles"] == 0) == (stats["compile_s"] == 0.0)
+    assert res == simulate(w, cfg)
+
+
+def test_time_skip_finishes_under_cycle_count():
+    """Event-horizon skipping: on a stall-heavy LTRF config (2 warps, the
+    Table-2 #7 latency point) whole stretches of cycles pass with no lane
+    able to issue, so the fused loop must converge in strictly fewer ticks
+    than simulated cycles — while staying bit-identical to the event
+    engine, breakdown included."""
+    from repro.sim import batch as B
+
+    w = WORKLOADS["kmeans"]
+    cfg = design_config("LTRF", table2_config=7, num_warps=2)
+    stats = B.reset_run_stats()
+    res, = B.run_batch([(w, cfg)], fallback=False)
+    assert res == simulate(w, cfg)
+    assert 0 < stats["ticks"] < res.cycles, (stats["ticks"], res.cycles)
+
+
+def test_mixed_supported_and_fallback_positions():
+    """A single `run_batch` call mixing batch-supported configs with every
+    out-of-domain axis (gto/lrr schedulers, arbitrated banks): fallback
+    jobs ride the event heap in place, positions preserved, everything
+    bit-identical per job."""
+    w = WORKLOADS["kmeans"]
+    base = design_config("LTRF", table2_config=7, num_warps=4)
+    jobs = [
+        (w, base),
+        (w, replace(base, scheduler="gto")),
+        (w, design_config("BL", table2_config=7, num_warps=4)),
+        (w, replace(base, scheduler="lrr")),
+        (w, replace(base, bank_model="arbitrated")),
+    ]
+    assert [batch_supported(c) for _, c in jobs] == \
+        [True, False, True, False, False]
+    for (wk, cfg), got in zip(jobs, run_batch(jobs)):
+        assert got == simulate(wk, cfg), \
+            (cfg.design, cfg.scheduler, cfg.bank_model)
+
+
+def test_watchdog_parity_across_budgets():
+    """Budget trips stay bit-identical across several watchdog budgets —
+    including budgets that land inside a dead-time gap, where the dt-jump
+    must not overshoot the recorded trip cycle."""
+    w = WORKLOADS["kmeans"]
+    cfg = design_config("LTRF", table2_config=7, num_warps=2)
+    ref = simulate(w, cfg)
+    for frac in (0.2, 0.5, 0.9):
+        tight = replace(cfg, max_cycles=max(1, int(ref.cycles * frac)))
+        got, = run_batch([(w, tight)])
+        assert isinstance(got, SimBudgetExceeded), frac
+        with pytest.raises(SimBudgetExceeded) as event_exc:
+            simulate(w, tight)
+        assert got.args == event_exc.value.args, frac
+
+
 # ------------------------------------------------------ sweep-service path
 
 def _runner(tmp_path, **kw):
@@ -155,6 +232,35 @@ def test_sweep_batch_mode_policy(tmp_path, monkeypatch):
     on = _runner(tmp_path, batch=True)
     monkeypatch.setattr(faults, "active_plan", lambda: faults.FaultPlan())
     assert on._batch_mode() == "off"
+
+
+def test_auto_batch_threshold_platform_policy(monkeypatch):
+    """'auto' mode's engage bar: low on a loaded non-CPU jax backend, the
+    compile-amortizing CPU bar otherwise — and the probe itself must never
+    import jax (a cache lookup should not pay a multi-second import)."""
+    import sys
+
+    from repro.serving import sweep as S
+
+    monkeypatch.delitem(sys.modules, "jax", raising=False)
+    assert S._auto_batch_threshold() == S._MIN_AUTO_BATCH_CPU
+    assert "jax" not in sys.modules  # probe did not import it
+
+    class _Dev:
+        def __init__(self, platform):
+            self.platform = platform
+
+    class _FakeJax:
+        def __init__(self, platform):
+            self._d = _Dev(platform)
+
+        def devices(self):
+            return [self._d]
+
+    monkeypatch.setitem(sys.modules, "jax", _FakeJax("gpu"))
+    assert S._auto_batch_threshold() == S._MIN_AUTO_BATCH
+    monkeypatch.setitem(sys.modules, "jax", _FakeJax("cpu"))
+    assert S._auto_batch_threshold() == S._MIN_AUTO_BATCH_CPU
 
 
 @pytest.mark.slow

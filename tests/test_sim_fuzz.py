@@ -367,6 +367,35 @@ def test_fuzz_batch_watchdog_budget_parity():
         assert out_tight.args == event_exc.value.args, seed
 
 
+@pytest.mark.slow
+def test_fuzz_batch_time_skip_engages():
+    """BATCH_REV 2's event-horizon skip, on random programs steered into
+    long dead time: two warps, slow cold memory, the highest MRF latency
+    point — whole stretches of cycles where no lane can issue.  The fused
+    loop must spend strictly fewer ticks than a skip-free lockstep loop
+    would (sum over chunks of the slowest lane's cycles), while every job
+    stays bit-identical to the event engine."""
+    from repro.sim import batch as B
+
+    jobs = []
+    for seed in range(930, 938):
+        w = random_workload(seed)
+        cfg = replace(random_config(seed), num_warps=2, mem_cycles=380,
+                      l1_hit_rate=0.3, mrf_latency_mult=6.3,
+                      max_inflight_prefetch=2)
+        assert B.batch_supported(cfg), seed
+        jobs.append((w, cfg))
+    stats = B.reset_run_stats()
+    outs = B.run_batch(jobs, fallback=False)
+    for seed, (w, cfg), got in zip(range(930, 938), jobs, outs):
+        assert got == simulate(w, cfg), (seed, cfg.design)
+    lanes = [B._Lane(w, cfg, B._encode_plan(w, cfg), B._occupancy(w, cfg))
+             for w, cfg in jobs]
+    no_skip = sum(max(outs[i].cycles for i in idxs)
+                  for _, idxs in B._chunk_lanes(lanes, list(range(len(jobs)))))
+    assert 0 < stats["ticks"] < no_skip, (stats["ticks"], no_skip)
+
+
 # -------------------------------------- observability fuzzed invariants
 
 @pytest.mark.parametrize("seed", range(700, 718))
